@@ -1,0 +1,53 @@
+"""Shared benchmark harness: subprocess multi-device timing + CSV emission.
+
+This container exposes ONE physical core; multi-device runs use
+``--xla_force_host_platform_device_count`` so devices TIMESHARE the core.
+Wall-clock therefore measures algorithmic + collective overhead, not true
+parallel speedup — the paper's hardware-scaling story is carried by the dry-run
+roofline (EXPERIMENTS.md §Roofline).  Each benchmark prints ``name,value,unit``
+CSV rows and states which paper artifact it reproduces.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+RESULTS = os.path.join(REPO, "benchmarks", "results")
+
+
+def run_worker(code: str, n_devices: int = 1, timeout: int = 1200,
+               extra_env: dict | None = None) -> dict:
+    """Run a snippet in a fresh process; the snippet must print one JSON line
+    prefixed with ``RESULT:``."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if n_devices > 1:
+        env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                            + env.get("XLA_FLAGS", ""))
+    env.update(extra_env or {})
+    res = subprocess.run([sys.executable, "-c", code], env=env, timeout=timeout,
+                         capture_output=True, text=True)
+    if res.returncode != 0:
+        raise RuntimeError(f"worker failed:\n{res.stderr[-3000:]}")
+    for line in res.stdout.splitlines():
+        if line.startswith("RESULT:"):
+            return json.loads(line[len("RESULT:"):])
+    raise RuntimeError(f"no RESULT line in worker output:\n{res.stdout[-2000:]}")
+
+
+def emit(rows: list[tuple], header=("name", "value", "unit")):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return path

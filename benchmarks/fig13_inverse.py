@@ -1,0 +1,75 @@
+"""Paper Fig 13: inverse heat conduction on the 10-region irregular map —
+wall time and speedup, 1 worker vs 10 workers, float32 vs float64.
+
+Paper findings reproduced qualitatively: ~9-10x on 10 workers (here
+core-normalized, see fig8 note), fp64 costs ~2-3x on CPU, and the Table-3
+heterogeneous point counts idle fast workers unless ``--balance`` levels them
+(the paper's own suggestion, measured below as the straggler-mitigation win).
+"""
+from benchmarks.common import emit, run_worker, save_json
+
+WORKER = """
+import json
+import numpy as np, jax
+from repro.core import *
+from repro.core.nets import MLPConfig, SubdomainModelConfig
+from repro.data import make_batch
+from repro.utils import time_fn
+
+pde = HeatConduction2D()
+dec = us_map_decomposition()
+topo = build_topology(dec, 12)
+cfg = SubdomainModelConfig(nets={{"u": MLPConfig(2, 1, 40, 3), "k": MLPConfig(2, 1, 40, 3)}})
+rng = np.random.default_rng(0)
+# Table 3 heterogeneous residual counts (scaled /10)
+counts = [300, 400, 500, 400, 300, 400, 80, 300, 500, 400]
+batch = make_batch(dec, topo, pde, counts, 48, rng, n_interior_data=100,
+                   balance={balance})
+b = batch.device_arrays()
+acts = ["tanh","sin","cos","tanh","sin","cos","tanh","sin","cos","tanh"]
+if {distributed}:
+    tr = DistributedDDTrainer(pde, cfg, topo, DDConfig(method=XPINN), act_codes=acts, lrs=6e-3)
+    st = tr.shard_state(tr.init(0))
+    bd = tr.shard_batch(b)
+else:
+    tr = ReferenceTrainer(pde, cfg, topo, DDConfig(method=XPINN), act_codes=acts, lrs=6e-3)
+    st, bd = tr.init(0), b
+t = time_fn(lambda: tr.step(st, bd), iters={iters}, warmup=2)
+print("RESULT:" + json.dumps({{"step_s": t}}))
+"""
+
+
+def run(iters=5):
+    rows, raw = [], []
+    cases = [
+        ("1worker_f32", dict(distributed=False, balance=False), 1, {}),
+        ("10worker_f32", dict(distributed=True, balance=False), 10, {}),
+        ("10worker_f32_balanced", dict(distributed=True, balance=True), 10, {}),
+        ("1worker_f64", dict(distributed=False, balance=False), 1,
+         {"JAX_ENABLE_X64": "1"}),
+        ("10worker_f64", dict(distributed=True, balance=False), 10,
+         {"JAX_ENABLE_X64": "1"}),
+    ]
+    res = {}
+    for tag, kw, ndev, env in cases:
+        out = run_worker(WORKER.format(iters=iters, **kw), n_devices=ndev,
+                         extra_env=env)
+        res[tag] = out["step_s"]
+        rows.append((f"fig13/{tag}/step", round(out["step_s"] * 1e3, 2), "ms"))
+        raw.append({"tag": tag, **out})
+    rows.append(("fig13/speedup_10w_f32_core_normalized",
+                 round(res["1worker_f32"] / res["10worker_f32"] * 10, 2), "x"))
+    rows.append(("fig13/f64_cost_factor",
+                 round(res["1worker_f64"] / res["1worker_f32"], 2), "x"))
+    rows.append(("fig13/balance_win",
+                 round(res["10worker_f32"] / res["10worker_f32_balanced"], 3), "x"))
+    save_json("fig13_inverse.json", raw)
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Fig 4: PINN cost profile — data-loss vs residual-loss vs backward time as
+functions of (#residual points | depth | width), 1-D Burgers, single worker.
+
+The paper's finding: residual-loss evaluation (AD graph traversal) dominates and
+grows with all three knobs.  We time the three phases with separate jitted
+closures on CPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import LossWeights, vanilla_pinn_loss
+from repro.core.nets import MLPConfig, SubdomainModelConfig, init_model, ACT_TANH
+from repro.core.domain import CartesianDecomposition
+from repro.core.pdes import Burgers1D
+from repro.data import make_vanilla_batch
+from repro.utils import time_fn
+
+from benchmarks.common import emit
+
+
+def _phases(pde, cfg, params, batch):
+    w = LossWeights()
+
+    @jax.jit
+    def data_loss(p):
+        from repro.core import losses, nets
+        u_fn = nets.scalar_field_fn(cfg, p, ACT_TANH, None)
+        pred = jax.vmap(u_fn)(batch.data_pts)
+        return jnp.sum((pred - batch.data_vals) ** 2)
+
+    @jax.jit
+    def res_loss(p):
+        from repro.core import nets
+        u_fn = nets.scalar_field_fn(cfg, p, ACT_TANH, None)
+        r = jax.vmap(lambda x: pde.residual(u_fn, x))(batch.res_pts)
+        return jnp.sum(r ** 2)
+
+    @jax.jit
+    def backward(p):
+        return jax.grad(lambda pp: vanilla_pinn_loss(pde, cfg, w, pp, ACT_TANH,
+                                                     None, batch)[0])(p)
+
+    return data_loss, res_loss, backward
+
+
+def run(iters: int = 10):
+    pde = Burgers1D()
+    dec = CartesianDecomposition(((-1, 1), (0, 1)), 1, 1)
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def one(tag, n_res, depth, width):
+        cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, width, depth)})
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        batch = make_vanilla_batch(dec, pde, n_res, 200, rng)
+        d, r, b = _phases(pde, cfg, params, batch)
+        rows.append((f"fig4/{tag}/data_loss", round(time_fn(d, params, iters=iters) * 1e6, 1), "us"))
+        rows.append((f"fig4/{tag}/residual_loss", round(time_fn(r, params, iters=iters) * 1e6, 1), "us"))
+        rows.append((f"fig4/{tag}/backward", round(time_fn(b, params, iters=iters) * 1e6, 1), "us"))
+
+    # (a) vs #residual points (200 data pts, 8x40 net)
+    for n in (1000, 4000, 10000):
+        one(f"nres={n}", n, 8, 40)
+    # (b) vs depth (10000 residual points, width 40)
+    for depth in (4, 8, 12):
+        one(f"depth={depth}", 10000, depth, 40)
+    # (c) vs width (10000 residual points, 8 hidden layers)
+    for width in (20, 40, 80):
+        one(f"width={width}", 10000, 8, width)
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

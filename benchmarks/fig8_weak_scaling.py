@@ -1,0 +1,37 @@
+"""Paper Fig 8: weak scaling — fixed work per subdomain, growing subdomain count.
+Reports aggregate residual-points/sec and W_e = T_1/T_NP (eq. 8).
+
+NOTE (single-core container): devices timeshare one core, so T_NP grows ~linearly
+with NP and W_e measures framework overhead, not hardware speedup; the dry-run
+roofline carries the hardware story.  A core-count-normalized efficiency
+(T_1 * NP / T_NP / NP == T_1/T_NP * 1) is also reported for reference.
+"""
+from benchmarks.common import emit, run_worker, save_json
+from benchmarks.scaling_common import worker_code
+
+
+def run(sizes=(1, 2, 4, 8), iters=5, n_res=2000):
+    rows, raw = [], []
+    for method in ("cpinn", "xpinn"):
+        t1 = None
+        for n in sizes:
+            out = run_worker(worker_code(n, 1, method, n_res=n_res, n_iface=20,
+                                         iters=iters), n_devices=max(n, 1))
+            t = out["total_s"]
+            t1 = t if t1 is None else t1
+            pps = n_res * n / t
+            rows.append((f"fig8/{method}/n{n}/points_per_s", round(pps, 1), "pts/s"))
+            rows.append((f"fig8/{method}/n{n}/We_timeshared", round(t1 / t, 3), "ratio"))
+            rows.append((f"fig8/{method}/n{n}/We_core_normalized",
+                         round(t1 * n / t, 3), "ratio"))
+            raw.append({"method": method, "n": n, **out})
+    save_json("fig8_weak.json", raw)
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

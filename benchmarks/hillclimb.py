@@ -1,0 +1,73 @@
+"""§Perf iteration harness: lower ONE cell with a named variant, print the three
+roofline terms, memory, and the top collectives with attribution.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch yi-34b --shape train_4k \
+      --variant seqpar [--micro 2]
+
+Variants compose config/rules levers; every run appends a JSON record to
+benchmarks/results/hillclimb.jsonl for the EXPERIMENTS.md §Perf log.
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+VARIANTS = {
+    "baseline": {},
+    "seqpar": {"extra_rules": {"res_seq": "model"}},
+    "micro2": {"micro_batches": 2},
+    "micro4": {"micro_batches": 4},
+    "seqpar+micro2": {"extra_rules": {"res_seq": "model"}, "micro_batches": 2},
+    "seqpar+micro4": {"extra_rules": {"res_seq": "model"}, "micro_batches": 4},
+    "bf16-params": {"bf16_params": True},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (e.g. capacity_factor=1.0)")
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+
+    from repro.launch import dryrun as dr
+    from repro.configs import get_config
+    from repro.utils.hlo import top_collectives
+
+    kw = dict(VARIANTS[args.variant])
+    cfg = get_config(args.arch)
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=")
+        field_t = type(getattr(cfg, k))
+        overrides[k] = field_t(v) if field_t is not bool else v.lower() == "true"
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+        kw["cfg_override"] = cfg
+
+    _, compiled, rec = dr.lower_cell(args.arch, args.shape, args.multi_pod, **kw)
+    rec["variant"] = args.variant + ("" if not overrides else f"+{overrides}")
+    rf = rec["roofline"]
+    m = rec.get("memory", {})
+    hbm = (m.get("argument_size_in_bytes", 0) + m.get("temp_size_in_bytes", 0)
+           + m.get("output_size_in_bytes", 0) - m.get("alias_size_in_bytes", 0))
+    print(f"== {args.arch} {args.shape} [{rec['variant']}] ==")
+    print(f"compute={rf['compute_s']*1e3:9.2f}ms  memory={rf['memory_s']*1e3:9.2f}ms  "
+          f"collective={rf['collective_s']*1e3:9.2f}ms  dom={rf['dominant']}")
+    print(f"mf_ratio={rec['model_flops_ratio']:.3f}  HBM/dev={hbm/2**30:.1f}GiB  "
+          f"compile={rec['compile_s']}s")
+    print("top collectives (per-device operand bytes):")
+    for t in top_collectives(compiled.as_text(), args.top):
+        print(f"  {t['kind']:18s} {t['bytes']/2**20:9.1f}MiB g={t['group']:4d} {t['op_name']}")
+    with open(os.path.join(os.path.dirname(__file__), "results", "hillclimb.jsonl"), "a") as f:
+        rec.pop("hlo_ops", None)
+        f.write(json.dumps(rec, default=str) + "\n")
+
+
+if __name__ == "__main__":
+    main()

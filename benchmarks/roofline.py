@@ -1,0 +1,141 @@
+"""Roofline table generator: aggregates the dry-run JSONs into the EXPERIMENTS.md
+tables (§Dry-run and §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS, emit
+
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def load(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN, f"*__{mesh}.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt_s(x):
+    return f"{x * 1e3:.2f}ms" if x >= 1e-4 else f"{x * 1e6:.1f}us"
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | MF ratio | HBM/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                        f"(sub-quadratic rule) | — | — |")
+            continue
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | {r.get('error','')[:40]} | | |")
+            continue
+        rf = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+               + mem.get("output_size_in_bytes", 0) - mem.get("alias_size_in_bytes", 0))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(rf['compute_s'])} | "
+            f"{_fmt_s(rf['memory_s'])} | {_fmt_s(rf['collective_s'])} | "
+            f"{rf['dominant'].replace('_s','')} | {r['model_flops_ratio']:.2f} | "
+            f"{hbm/2**30:.1f}GiB |")
+    return "\n".join(rows)
+
+
+def run():
+    rows = []
+    for r in load("16x16"):
+        if not r.get("ok"):
+            continue
+        rf = r["roofline"]
+        dom = rf["dominant"]
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/dominant", dom.replace("_s", ""), ""))
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/step_bound",
+                     round(max(rf["compute_s"], rf["memory_s"], rf["collective_s"]) * 1e3, 3),
+                     "ms"))
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/model_flops_ratio",
+                     round(r["model_flops_ratio"], 3), ""))
+    return rows
+
+
+def main():
+    emit(run())
+    print()
+    print(markdown_table())
+
+
+if __name__ == "__main__":
+    main()
+
+
+def _splice(path: str, begin: str, end: str, content: str):
+    with open(path) as f:
+        txt = f.read()
+    b, e = txt.index(begin) + len(begin), txt.index(end)
+    with open(path, "w") as f:
+        f.write(txt[:b] + "\n" + content + "\n" + txt[e:])
+
+
+def write_experiments_md():
+    """Splice the dry-run + roofline tables into EXPERIMENTS.md."""
+    import os
+    md_path = os.path.join(os.path.dirname(RESULTS), "..", "EXPERIMENTS.md")
+    md_path = os.path.abspath(md_path)
+
+    dry = ["**Single-pod (16,16) — 256 chips.**  Mesh compile status + per-device",
+           "memory analysis; multi-pod (2,16,16) status below.", ""]
+    dry.append("| arch | shape | status | args/dev | temp/dev | collectives/dev | compile |")
+    dry.append("|---|---|---|---|---|---|---|")
+    for r in load("16x16"):
+        if r.get("skipped"):
+            dry.append(f"| {r['arch']} | {r['shape']} | skip (sub-quadratic rule) | | | | |")
+            continue
+        if not r.get("ok"):
+            dry.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | |")
+            continue
+        m = r.get("memory", {})
+        dry.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{m.get('argument_size_in_bytes',0)/2**30:.2f}GiB | "
+            f"{m.get('temp_size_in_bytes',0)/2**30:.2f}GiB | "
+            f"{r['collectives']['total_bytes']/2**30:.1f}GiB | {r['compile_s']}s |")
+    mp = load("2x16x16")
+    if mp:
+        n_ok = sum(1 for r in mp if r.get("ok"))
+        n_skip = sum(1 for r in mp if r.get("skipped"))
+        n_fail = len(mp) - n_ok - n_skip
+        dry.append("")
+        dry.append(f"**Multi-pod (2,16,16) — 512 chips:** {n_ok} ok / {n_skip} skip / "
+                   f"{n_fail} fail of {len(mp)} cells (per-cell JSONs in "
+                   f"benchmarks/results/dryrun/*2x16x16*).  The pod axis carries the "
+                   f"data-parallel gradient all-reduce (batch sharded over pod x data).")
+        if n_fail:
+            for r in mp:
+                if not (r.get("ok") or r.get("skipped")):
+                    dry.append(f"  - FAIL {r['arch']} {r['shape']}: {r.get('error','')[:100]}")
+    _splice(md_path, "<!-- DRYRUN:BEGIN -->", "<!-- DRYRUN:END -->", "\n".join(dry))
+
+    roof = [markdown_table("16x16"), "",
+            "Per-cell one-line improvement notes (dominant-term levers):", ""]
+    for r in load("16x16"):
+        if not r.get("ok"):
+            continue
+        kind, dom = r["kind"], r["roofline"]["dominant"]
+        if kind == "train":
+            note = ("sequence-parallel residual stream (converts TP all-reduce to RS/AG "
+                    "and shards remat carries) + micro-batching" if dom != "compute_s"
+                    else "larger per-device batch / fewer remat recomputes")
+        elif kind == "prefill":
+            note = "flash-attention kernel keeps scores in VMEM; bf16 param cast-once"
+        else:
+            note = ("cache layout: shard kv_seq over model; MLA absorbed decode already "
+                    "minimizes cache reads" if dom == "memory_s" else "batch the decode")
+        roof.append(f"- {r['arch']} × {r['shape']}: dominant={dom.replace('_s','')} → {note}")
+    _splice(md_path, "<!-- ROOFLINE:BEGIN -->", "<!-- ROOFLINE:END -->", "\n".join(roof))
+    print(f"wrote tables into {md_path}")

@@ -1,0 +1,59 @@
+"""Benchmark driver: one function per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only fig4,fig6,...]``
+
+Prints ``name,value,unit`` CSV rows per benchmark; raw measurements land in
+benchmarks/results/*.json.  The roofline rows read the dry-run outputs
+(run ``python -m repro.launch.dryrun`` first for those).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,fig6,fig8,fig9,table2,fig13,roofline")
+    ap.add_argument("--quick", action="store_true", help="fewer sizes/iters")
+    args = ap.parse_args()
+
+    from benchmarks import (fig4_cost_profile, fig6_comp_comm, fig8_weak_scaling,
+                            fig9_strong_scaling, fig13_inverse, roofline,
+                            table2_spacetime)
+
+    quick = args.quick
+    suite = {
+        "fig4": lambda: fig4_cost_profile.run(iters=3 if quick else 10),
+        "fig6": lambda: fig6_comp_comm.run(sizes=(4,) if quick else (4, 8, 12),
+                                           iters=3 if quick else 5),
+        "fig8": lambda: fig8_weak_scaling.run(sizes=(1, 4) if quick else (1, 2, 4, 8),
+                                              iters=3 if quick else 5),
+        "fig9": lambda: fig9_strong_scaling.run(sizes=(1, 4) if quick else (1, 2, 4, 8),
+                                                iters=3 if quick else 5),
+        "table2": lambda: table2_spacetime.run(iters=3 if quick else 5),
+        "fig13": lambda: fig13_inverse.run(iters=3 if quick else 5),
+        "roofline": roofline.run,
+    }
+    only = args.only.split(",") if args.only else list(suite)
+
+    all_rows, failures = [], []
+    for name in only:
+        try:
+            rows = suite[name]()
+            all_rows.extend(rows)
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    emit(all_rows)
+    if failures:
+        print(f"FAILURES: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

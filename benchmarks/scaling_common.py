@@ -1,0 +1,43 @@
+"""Shared worker snippet for the distributed cPINN/XPINN scaling benchmarks
+(Figs 6-9, Table 2): runs N steps of the DistributedDDTrainer on a fake-device
+mesh and reports per-step wall time, with an optional exchange-disabled ablation
+(the paper's computation-vs-communication split)."""
+from __future__ import annotations
+
+WORKER = """
+import json, time
+import numpy as np, jax
+from repro.core import *
+from repro.core.losses import METHODS
+from repro.core.nets import MLPConfig, SubdomainModelConfig
+from repro.data import make_batch
+from repro.utils import time_fn
+
+nx, nt = {nx}, {nt}
+method = METHODS["{method}"]
+n_res, n_iface, width, depth = {n_res}, {n_iface}, {width}, {depth}
+pde = Burgers1D()
+dec = CartesianDecomposition(((-1, 1), (0, 1)), nx, nt)
+topo = build_topology(dec, n_iface)
+cfg = SubdomainModelConfig(nets={{"u": MLPConfig(2, 1, width, depth)}})
+rng = np.random.default_rng(0)
+batch = make_batch(dec, topo, pde, n_res, 20, rng)
+b = batch.device_arrays()
+
+out = {{"n_sub": dec.n_sub}}
+for tag, disable in [("total", False), ("comp_only", True)]:
+    tr = DistributedDDTrainer(pde, cfg, topo,
+                              DDConfig(method=method, disable_exchange=disable),
+                              lrs=1e-3)
+    st = tr.shard_state(tr.init(0))
+    bd = tr.shard_batch(b)
+    step = lambda: tr.step(st, bd)
+    out[tag + "_s"] = time_fn(lambda: tr.step(st, bd), iters={iters}, warmup=2)
+out["comm_s"] = max(0.0, out["total_s"] - out["comp_only_s"])
+print("RESULT:" + json.dumps(out))
+"""
+
+
+def worker_code(nx, nt, method, n_res=200, n_iface=20, width=20, depth=5, iters=5):
+    return WORKER.format(nx=nx, nt=nt, method=method, n_res=n_res,
+                         n_iface=n_iface, width=width, depth=depth, iters=iters)

@@ -1,0 +1,32 @@
+"""Paper Table 2: cPINN space-only partitions vs XPINN space-time partitions at
+equal subdomain counts — per-iteration wall time on the viscous Burgers problem.
+Total residual points fixed (80k in paper; reduced here), interface points 20."""
+from benchmarks.common import emit, run_worker, save_json
+from benchmarks.scaling_common import worker_code
+
+TOTAL_RES = 16000
+
+
+def run(iters=5):
+    cases = [
+        ("cpinn", 4, 1), ("cpinn", 8, 1),
+        ("xpinn", 2, 2), ("xpinn", 4, 2),
+    ]
+    rows, raw = [], []
+    for method, nx, nt in cases:
+        n = nx * nt
+        out = run_worker(worker_code(nx, nt, method, n_res=TOTAL_RES // n,
+                                     n_iface=20, iters=iters), n_devices=n)
+        rows.append((f"table2/{method}/{nx}x{nt}/time_per_iter",
+                     round(out["total_s"] * 1e3, 2), "ms"))
+        raw.append({"method": method, "nx": nx, "nt": nt, **out})
+    save_json("table2_spacetime.json", raw)
+    return rows
+
+
+def main():
+    emit(run())
+
+
+if __name__ == "__main__":
+    main()

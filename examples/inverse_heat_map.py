@@ -1,0 +1,71 @@
+"""Inverse heat conduction on a 10-region irregular map (paper §7.6, Figs 11-13).
+
+Variable conductivity K(x,y) inferred from temperature observations: each of 10
+irregular (non-convex) polygonal regions gets TWO networks (T-net, K-net) with
+per-region activation functions (paper Table 3) and heterogeneous residual-point
+counts.  XPINN residual+solution continuity stitches the regions.
+
+    PYTHONPATH=src python examples/inverse_heat_map.py [--steps 2000] [--balance]
+"""
+import argparse
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    DDConfig, HeatConduction2D, LossWeights, ReferenceTrainer, XPINN,
+    build_topology, evaluate_l2, us_map_decomposition,
+)
+from repro.core.nets import MLPConfig, SubdomainModelConfig  # noqa: E402
+from repro.data import make_batch  # noqa: E402
+
+# paper Table 3 (scaled /10 for CPU): residual points + activation per region
+TABLE3_COUNTS = [300, 400, 500, 400, 300, 400, 80, 300, 500, 400]
+TABLE3_ACTS = ["tanh", "sin", "cos", "tanh", "sin", "cos", "tanh", "sin", "cos", "tanh"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=2000)
+    ap.add_argument("--balance", action="store_true",
+                    help="equalize per-region residual points (straggler fix)")
+    args = ap.parse_args()
+
+    pde = HeatConduction2D()
+    decomp = us_map_decomposition()
+    topo = build_topology(decomp, n_iface=16)
+    print(f"[inverse] 10 irregular regions, {int(topo.edge_mask.sum()) // 2} "
+          f"interfaces, max degree {topo.max_degree}")
+
+    # paper: 3 hidden layers x 80 neurons, separate K network (reduced width)
+    model_cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 40, 3),
+                                           "k": MLPConfig(2, 1, 40, 3)})
+    batch = make_batch(decomp, topo, pde, TABLE3_COUNTS, n_bnd=48,
+                       rng=np.random.default_rng(0), n_interior_data=150,
+                       balance=args.balance)
+    trainer = ReferenceTrainer(
+        pde, model_cfg, topo,
+        DDConfig(method=XPINN, weights=LossWeights(data=40.0)),
+        act_codes=TABLE3_ACTS, lrs=6e-3,
+    )
+    state = trainer.init(0)
+    b = batch.device_arrays()
+
+    t0 = time.time()
+    for s in range(args.steps):
+        state, terms = trainer.step(state, b)
+        if (s + 1) % 250 == 0:
+            loss = float(np.asarray(terms["loss"]).sum())
+            err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
+            print(f"[inverse] step {s+1:5d} loss={loss:9.4f} rel_L2(T,K)={err:.4f} "
+                  f"({(s+1)/(time.time()-t0):.1f} it/s)")
+
+    err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
+    print(f"[inverse] final rel L2 error (T, K stacked) vs exact: {err:.4f}")
+
+
+if __name__ == "__main__":
+    main()

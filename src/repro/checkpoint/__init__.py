@@ -1,0 +1,2 @@
+from repro.checkpoint import ckpt
+from repro.checkpoint.ckpt import latest_step, raw_leaves, restore, save

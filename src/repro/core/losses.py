@@ -1,0 +1,158 @@
+"""cPINN / XPINN loss functions (paper eqs. (3), (5), (6)).
+
+Algorithm 1 splits each step into a COMPUTE stage (evaluate u, residual F, and flux
+f.n at the own interface points — needs no neighbor data) and a COMMUNICATE stage
+(exchange those quantities), followed by the loss.  We mirror that split:
+
+* :func:`interface_payload` — everything a subdomain SENDS (per slot): its solution
+  ``u`` at the shared interface points, plus ``f . n`` (cPINN, eq. 5) or the PDE
+  residual ``F`` (XPINN, eq. 6).  Message size per interface point is
+  ``n_fields + n_eq`` scalars — O(N_I), independent of network size, which is the
+  paper's central communication-cost argument vs. data-parallel (O(N_params)).
+* :func:`subdomain_loss` — eq. (5)/(6) assembled from local evaluations plus the
+  RECEIVED payload.  Receiving ``f . n_neighbor`` means the local flux term compares
+  ``f_q . n + recv`` (since ``n_neighbor = -n``), matching eq. (5) exactly.
+
+All functions below are written for ONE subdomain (no stacked leading axis); the
+trainers vmap (reference) or shard_map (distributed) them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nets
+from repro.core.pdes import PDE
+
+CPINN, XPINN = 0, 1
+METHODS = {"cpinn": CPINN, "xpinn": XPINN}
+
+
+@dataclass(frozen=True)
+class LossWeights:
+    """W_u, W_F, W_I (u-avg), W_I_flux / W_I_F of eqs. (5)/(6)."""
+
+    data: float = 20.0
+    residual: float = 1.0
+    u_avg: float = 20.0
+    iface: float = 1.0
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SubBatch:
+    """Training points of ONE subdomain (padded + masked so shapes are uniform)."""
+
+    res_pts: jax.Array    # (n_res, dim)
+    res_mask: jax.Array   # (n_res,)
+    data_pts: jax.Array   # (n_data, dim)
+    data_vals: jax.Array  # (n_data, n_fields)
+    data_comp: jax.Array  # (n_data, n_fields) component selector
+    data_mask: jax.Array  # (n_data,)
+    iface_pts: jax.Array  # (K, n_iface, dim)
+    iface_nrm: jax.Array  # (K, n_iface, dim) outward normal
+    edge_mask: jax.Array  # (K,)
+
+
+def _u_fn(pde: PDE, cfg, params, act_code, width_masks):
+    return nets.scalar_field_fn(cfg, params, act_code, width_masks)
+
+
+def interface_payload(
+    pde: PDE, cfg, method: int, params, act_code, width_masks,
+    iface_pts: jax.Array,  # (K, n_iface, dim)
+) -> dict[str, jax.Array]:
+    """Quantities SENT to neighbors: u and (f.n | F) at own interface points."""
+    u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
+    K, nI, dim = iface_pts.shape
+    flat = iface_pts.reshape(K * nI, dim)
+    u = jax.vmap(u_fn)(flat).reshape(K, nI, pde.n_fields)
+    if method == CPINN:
+        fl = jax.vmap(lambda x: pde.flux(u_fn, x))(flat)  # (K*nI, n_eq, dim)
+        g = fl.reshape(K, nI, pde.n_eq, dim)
+    else:
+        r = jax.vmap(lambda x: pde.residual(u_fn, x))(flat)  # (K*nI, n_eq)
+        g = r.reshape(K, nI, pde.n_eq)
+    return {"u": u, "g": g}
+
+
+def payload_dot_normal(payload: dict, iface_nrm: jax.Array, method: int) -> dict:
+    """Project the cPINN flux tensor onto the sender's outward normal.
+
+    Done BEFORE sending so the wire format is (n_fields + n_eq) scalars per point
+    (the paper's 'very small buffer'); XPINN payloads are already scalar residuals.
+    """
+    if method == CPINN:
+        g = jnp.einsum("kned,knd->kne", payload["g"], iface_nrm)
+        return {"u": payload["u"], "g": g}
+    return payload
+
+
+def subdomain_loss(
+    pde: PDE, cfg, method: int, weights: LossWeights,
+    params, act_code, width_masks,
+    batch: SubBatch,
+    recv_u: jax.Array,   # (K, n_iface, n_fields) neighbor u at shared points
+    recv_g: jax.Array,   # (K, n_iface, n_eq)     neighbor f.n_nbr (cPINN) or F (XPINN)
+    own: dict | None = None,  # precomputed normal-projected interface payload
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Eq. (5) (cPINN) or eq. (6) (XPINN) for one subdomain."""
+    u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
+    K, nI, dim = batch.iface_pts.shape
+
+    # --- MSE_u: data / boundary mismatch ------------------------------------
+    pred = jax.vmap(u_fn)(batch.data_pts)                     # (n_data, F)
+    w = batch.data_comp * batch.data_mask[:, None]
+    mse_data = jnp.sum(w * (pred - batch.data_vals) ** 2) / jnp.maximum(jnp.sum(w), 1.0)
+
+    # --- MSE_F: PDE residual --------------------------------------------------
+    res = jax.vmap(lambda x: pde.residual(u_fn, x))(batch.res_pts)  # (n_res, n_eq)
+    mse_res = jnp.sum(batch.res_mask[:, None] * res**2) / jnp.maximum(
+        jnp.sum(batch.res_mask) * pde.n_eq, 1.0
+    )
+
+    # --- interface terms -----------------------------------------------------
+    if own is None:
+        own = interface_payload(pde, cfg, method, params, act_code, width_masks, batch.iface_pts)
+        own = payload_dot_normal(own, batch.iface_nrm, method)
+    em = batch.edge_mask[:, None, None]
+
+    # MSE_u_avg: |u_q - {{u}}|^2 = |(u_q - u_nbr)/2|^2, summed over neighbors q+
+    davg = 0.5 * (own["u"] - recv_u)
+    mse_avg = jnp.sum(em * davg**2) / (nI * pde.n_fields)
+
+    # cPINN eq.(5): |f_q.n - f_q+.n|^2 with recv = f_q+ . n_q+ = -f_q+ . n
+    # XPINN eq.(6): |F_q - F_q+|^2
+    diff = own["g"] + recv_g if method == CPINN else own["g"] - recv_g
+    mse_iface = jnp.sum(em * diff**2) / (nI * pde.n_eq)
+
+    total = (
+        weights.data * mse_data
+        + weights.residual * mse_res
+        + weights.u_avg * mse_avg
+        + weights.iface * mse_iface
+    )
+    terms = {
+        "loss": total, "mse_data": mse_data, "mse_res": mse_res,
+        "mse_avg": mse_avg, "mse_iface": mse_iface,
+    }
+    return total, terms
+
+
+def vanilla_pinn_loss(
+    pde: PDE, cfg, weights: LossWeights, params, act_code, width_masks, batch: SubBatch
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Eq. (3): the single-domain PINN loss (data-parallel baseline, Fig 1a)."""
+    u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
+    pred = jax.vmap(u_fn)(batch.data_pts)
+    w = batch.data_comp * batch.data_mask[:, None]
+    mse_data = jnp.sum(w * (pred - batch.data_vals) ** 2) / jnp.maximum(jnp.sum(w), 1.0)
+    res = jax.vmap(lambda x: pde.residual(u_fn, x))(batch.res_pts)
+    mse_res = jnp.sum(batch.res_mask[:, None] * res**2) / jnp.maximum(
+        jnp.sum(batch.res_mask) * pde.n_eq, 1.0
+    )
+    total = weights.data * mse_data + weights.residual * mse_res
+    return total, {"loss": total, "mse_data": mse_data, "mse_res": mse_res}

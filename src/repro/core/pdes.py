@@ -1,0 +1,312 @@
+"""PDE definitions for the paper's computational experiments (§7).
+
+Every PDE exposes *per-point* residual and flux functions built from forward-mode AD
+(``jax.jvp`` — exact derivatives, the paper's "graph-based differentiation" of §4.1);
+the loss layer vmaps them over collocation points.
+
+Implemented (one per paper experiment):
+
+* :class:`Burgers1D`      — §7.3 / §7.5 viscous Burgers, space(-time) DD; Cole-Hopf
+                            exact solution via Gauss-Hermite quadrature for validation.
+* :class:`NavierStokes2D` — §7.4 steady incompressible NS (lid-driven cavity, Re=100);
+                            fluxes exactly as the paper's Table 1.
+* :class:`HeatConduction2D` — §7.6 inverse variable-conductivity problem; temperature
+                            and conductivity are SEPARATE networks; the forcing term
+                            derived from the paper's exact (T, K) is f = 4 exp(-0.1 y).
+
+Conventions: ``u_fn : (dim,) -> (n_fields,)`` is a single-point closure over the
+subdomain model.  ``residual`` returns ``(n_eq,)``; ``flux`` returns ``(n_eq, dim)``
+(space-time flux — for conservation laws the temporal flux component is the state
+itself, so cPINN normal-flux continuity is well defined on ANY interface orientation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Fn = Callable[[jax.Array], jax.Array]
+
+
+def dir_deriv(u_fn: Fn, x: jax.Array, v: jax.Array) -> jax.Array:
+    """First directional derivative d/de u(x + e v)."""
+    return jax.jvp(u_fn, (x,), (v.astype(x.dtype),))[1]
+
+
+def dir_deriv2(u_fn: Fn, x: jax.Array, v: jax.Array) -> jax.Array:
+    """Second directional derivative (forward-over-forward)."""
+    v = v.astype(x.dtype)
+    g = lambda y: jax.jvp(u_fn, (y,), (v.astype(y.dtype),))[1]
+    return jax.jvp(g, (x,), (v,))[1]
+
+
+def _basis(dim: int, i: int) -> jax.Array:
+    return jnp.zeros((dim,)).at[i].set(1.0)
+
+
+class PDE:
+    name: str = "pde"
+    input_dim: int
+    n_fields: int
+    n_eq: int
+
+    def residual(self, u_fn: Fn, x: jax.Array) -> jax.Array:  # (n_eq,)
+        raise NotImplementedError
+
+    def flux(self, u_fn: Fn, x: jax.Array) -> jax.Array:  # (n_eq, dim)
+        raise NotImplementedError
+
+    def boundary_data(self, pts: np.ndarray):
+        """(values (n, n_fields), comp_mask (n, n_fields), keep (n,)) on candidate
+        global-boundary points.  comp_mask selects which components carry data."""
+        raise NotImplementedError
+
+    def exact(self, pts: np.ndarray) -> np.ndarray | None:
+        return None
+
+
+# ------------------------------------------------------------------ Burgers (1D+t)
+
+@dataclass(frozen=True)
+class Burgers1D(PDE):
+    """u_t + u u_x = nu u_xx on x in [-1,1], t in [0,T];  coords = (x, t).
+
+    u(x,0) = -sin(pi x); u(+-1,t) = 0 (paper eq. (10)/(12), nu = 0.01/pi).
+    """
+
+    nu: float = 0.01 / np.pi
+    t_final: float = 1.0
+    name: str = "burgers1d"
+    input_dim: int = 2
+    n_fields: int = 1
+    n_eq: int = 1
+
+    def residual(self, u_fn: Fn, x: jax.Array) -> jax.Array:
+        ex, et = _basis(2, 0), _basis(2, 1)
+        u = u_fn(x)
+        u_x = dir_deriv(u_fn, x, ex)
+        u_t = dir_deriv(u_fn, x, et)
+        u_xx = dir_deriv2(u_fn, x, ex)
+        return u_t + u * u_x - self.nu * u_xx
+
+    def flux(self, u_fn: Fn, x: jax.Array) -> jax.Array:
+        # conservation form: d/dt u + d/dx (u^2/2 - nu u_x) = 0
+        u = u_fn(x)
+        u_x = dir_deriv(u_fn, x, _basis(2, 0))
+        fx = 0.5 * u * u - self.nu * u_x
+        ft = u
+        return jnp.stack([fx, ft], axis=-1)  # (1, 2)
+
+    def boundary_data(self, pts: np.ndarray):
+        x, t = pts[:, 0], pts[:, 1]
+        on_ic = np.isclose(t, 0.0, atol=1e-9)
+        on_wall = np.isclose(np.abs(x), 1.0, atol=1e-9)
+        vals = np.where(on_ic, -np.sin(np.pi * x), 0.0)[:, None]
+        keep = (on_ic | on_wall).astype(np.float32)
+        comp = np.ones((len(pts), 1), np.float32)
+        return vals.astype(np.float32), comp, keep
+
+    def exact(self, pts: np.ndarray) -> np.ndarray:
+        """Cole-Hopf solution via Gauss-Hermite quadrature (validation oracle)."""
+        he_x, he_w = np.polynomial.hermite.hermgauss(96)
+        x, t = pts[:, 0], np.maximum(pts[:, 1], 1e-12)
+        nu = self.nu
+        eta = (2.0 * np.sqrt(nu * t))[:, None] * he_x[None, :]  # (n, q)
+        y = x[:, None] - eta
+        f = np.exp(-np.cos(np.pi * y) / (2 * np.pi * nu))
+        num = (np.sin(np.pi * y) * f * he_w[None, :]).sum(axis=1)
+        den = (f * he_w[None, :]).sum(axis=1)
+        u = -num / den
+        u = np.where(pts[:, 1] <= 1e-12, -np.sin(np.pi * x), u)
+        return u[:, None].astype(np.float32)
+
+
+# ------------------------------------------------------- steady Navier-Stokes (2D)
+
+@dataclass(frozen=True)
+class NavierStokes2D(PDE):
+    """Steady incompressible NS, lid-driven cavity (paper §7.4, Re=100).
+
+    fields = (u, v, p); equations = (x-mom, y-mom, mass); fluxes per Table 1.
+    """
+
+    re: float = 100.0
+    lid_velocity: float = 1.0
+    name: str = "ns2d"
+    input_dim: int = 2
+    n_fields: int = 3
+    n_eq: int = 3
+
+    def residual(self, u_fn: Fn, x: jax.Array) -> jax.Array:
+        ex, ey = _basis(2, 0), _basis(2, 1)
+        w = u_fn(x)                     # (3,) = u, v, p
+        wx = dir_deriv(u_fn, x, ex)
+        wy = dir_deriv(u_fn, x, ey)
+        wxx = dir_deriv2(u_fn, x, ex)
+        wyy = dir_deriv2(u_fn, x, ey)
+        u, v = w[0], w[1]
+        inv_re = 1.0 / self.re
+        r_u = u * wx[0] + v * wy[0] + wx[2] - inv_re * (wxx[0] + wyy[0])
+        r_v = u * wx[1] + v * wy[1] + wy[2] - inv_re * (wxx[1] + wyy[1])
+        r_m = wx[0] + wy[1]
+        return jnp.stack([r_u, r_v, r_m])
+
+    def flux(self, u_fn: Fn, x: jax.Array) -> jax.Array:
+        ex, ey = _basis(2, 0), _basis(2, 1)
+        w = u_fn(x)
+        wx = dir_deriv(u_fn, x, ex)
+        wy = dir_deriv(u_fn, x, ey)
+        u, v, p = w[0], w[1], w[2]
+        inv_re = 1.0 / self.re
+        fx = jnp.stack([u * u + p - inv_re * wx[0],
+                        u * v - inv_re * wx[1],
+                        u])
+        fy = jnp.stack([u * v - inv_re * wy[0],
+                        v * v + p - inv_re * wy[1],
+                        v])
+        return jnp.stack([fx, fy], axis=-1)  # (3, 2)
+
+    def boundary_data(self, pts: np.ndarray):
+        y = pts[:, 1]
+        on_lid = np.isclose(y, 1.0, atol=1e-9)
+        vals = np.zeros((len(pts), 3), np.float32)
+        vals[:, 0] = np.where(on_lid, self.lid_velocity, 0.0)
+        comp = np.zeros((len(pts), 3), np.float32)
+        comp[:, 0] = comp[:, 1] = 1.0  # velocity Dirichlet only; p unconstrained
+        keep = np.ones((len(pts),), np.float32)
+        return vals, comp, keep
+
+
+# ------------------------------------------- inverse heat conduction (variable K)
+
+@dataclass(frozen=True)
+class HeatConduction2D(PDE):
+    """d/dx(K T_x) + d/dy(K T_y) = f,   f = 4 exp(-0.1 y)  (paper §7.6).
+
+    fields = (T, K): TWO separate networks per subdomain (paper: "conductivity ...
+    represented by a separate neural network").  Inverse problem: T data inside the
+    domain, K data on the global boundary; K inferred everywhere.
+    """
+
+    name: str = "heat2d_inverse"
+    input_dim: int = 2
+    n_fields: int = 2
+    n_eq: int = 1
+
+    def residual(self, u_fn: Fn, x: jax.Array) -> jax.Array:
+        ex, ey = _basis(2, 0), _basis(2, 1)
+        w = u_fn(x)                     # (2,) = T, K
+        wx = dir_deriv(u_fn, x, ex)
+        wy = dir_deriv(u_fn, x, ey)
+        wxx = dir_deriv2(u_fn, x, ex)
+        wyy = dir_deriv2(u_fn, x, ey)
+        K = w[1]
+        r = wx[1] * wx[0] + K * wxx[0] + wy[1] * wy[0] + K * wyy[0] - self._forcing(x)
+        return r[None]
+
+    @staticmethod
+    def _forcing(x: jax.Array) -> jax.Array:
+        return 4.0 * jnp.exp(-0.1 * x[1])
+
+    def flux(self, u_fn: Fn, x: jax.Array) -> jax.Array:
+        ex, ey = _basis(2, 0), _basis(2, 1)
+        w = u_fn(x)
+        wx = dir_deriv(u_fn, x, ex)
+        wy = dir_deriv(u_fn, x, ey)
+        K = w[1]
+        return jnp.stack([K * wx[0], K * wy[0]], axis=-1)[None, :]  # (1, 2)
+
+    def exact(self, pts: np.ndarray) -> np.ndarray:
+        T = 20.0 * np.exp(-0.1 * pts[:, 1])
+        K = 20.0 + np.exp(0.1 * pts[:, 1]) * np.sin(0.5 * pts[:, 0])
+        return np.stack([T, K], axis=-1).astype(np.float32)
+
+    def boundary_data(self, pts: np.ndarray):
+        ex = self.exact(pts)
+        comp = np.zeros((len(pts), 2), np.float32)
+        comp[:, 0] = 1.0  # Dirichlet T on the boundary
+        comp[:, 1] = 1.0  # K data available along the boundary (paper §7.6)
+        keep = np.ones((len(pts),), np.float32)
+        return ex, comp, keep
+
+    def interior_data(self, pts: np.ndarray):
+        """Inverse-problem observations: T known inside the domain, K unknown."""
+        ex = self.exact(pts)
+        comp = np.zeros((len(pts), 2), np.float32)
+        comp[:, 0] = 1.0
+        return ex, comp
+
+
+
+
+
+# --------------------------------------------------- 1-D compressible Euler (Sod)
+
+@dataclass(frozen=True)
+class Euler1D(PDE):
+    """1-D compressible Euler equations in conservation form (the cPINN paper's
+    [16] home turf: nonlinear conservation laws with flux-continuity stitching).
+
+    coords = (x, t); fields U = (rho, rho*u, E); space-time flux rows
+    (F(U), U) so cPINN normal-flux continuity works on any interface orientation:
+        F = (rho u,  rho u^2 + p,  u (E + p)),   p = (gamma-1)(E - rho u^2 / 2).
+
+    IC: Sod shock tube (rho,u,p) = (1,0,1) for x<0.5 | (0.125,0,0.1) for x>0.5.
+    """
+
+    gamma: float = 1.4
+    t_final: float = 0.2
+    name: str = "euler1d"
+    input_dim: int = 2
+    n_fields: int = 3
+    n_eq: int = 3
+
+    def _primitive(self, U):
+        rho = U[0]
+        u = U[1] / (rho + 1e-8)
+        p = (self.gamma - 1.0) * (U[2] - 0.5 * rho * u * u)
+        return rho, u, p
+
+    def _flux_x(self, U):
+        rho, u, p = self._primitive(U)
+        return jnp.stack([U[1], U[1] * u + p, u * (U[2] + p)])
+
+    def residual(self, u_fn: Fn, x: jax.Array) -> jax.Array:
+        et = _basis(2, 1)
+        U_t = dir_deriv(u_fn, x, et)
+        Fx = lambda y: self._flux_x(u_fn(y))
+        F_x = dir_deriv(Fx, x, _basis(2, 0))
+        return U_t + F_x
+
+    def flux(self, u_fn: Fn, x: jax.Array) -> jax.Array:
+        U = u_fn(x)
+        return jnp.stack([self._flux_x(U), U], axis=-1)  # (3, 2)
+
+    def _sod_ic(self, x: np.ndarray) -> np.ndarray:
+        left = x < 0.5
+        rho = np.where(left, 1.0, 0.125)
+        u = np.zeros_like(x)
+        p = np.where(left, 1.0, 0.1)
+        E = p / (self.gamma - 1.0) + 0.5 * rho * u * u
+        return np.stack([rho, rho * u, E], axis=-1).astype(np.float32)
+
+    def boundary_data(self, pts: np.ndarray):
+        x, t = pts[:, 0], pts[:, 1]
+        on_ic = np.isclose(t, 0.0, atol=1e-9)
+        on_wall = np.isclose(x, 0.0, atol=1e-9) | np.isclose(x, 1.0, atol=1e-9)
+        vals = self._sod_ic(x)  # walls keep their undisturbed IC state for t<=0.2
+        keep = (on_ic | on_wall).astype(np.float32)
+        comp = np.ones((len(pts), 3), np.float32)
+        return vals, comp, keep
+
+
+REGISTRY = {
+    "burgers1d": Burgers1D,
+    "ns2d": NavierStokes2D,
+    "heat2d_inverse": HeatConduction2D,
+    "euler1d": Euler1D,
+}

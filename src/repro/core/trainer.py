@@ -1,0 +1,359 @@
+"""Distributed cPINN/XPINN trainers — the paper's Algorithm 1 in JAX.
+
+Three trainers share one loss assembly:
+
+* :class:`DistributedDDTrainer` — production path.  ``shard_map`` over a 1-D
+  ``("sub",)`` mesh (one device per subdomain, the paper's one-rank-per-subdomain).
+  Each step: (compute) local interface payload -> (communicate) one ppermute per
+  topology slot -> (loss) eq. (5)/(6) -> independent Adam updates with per-subdomain
+  learning rates.  Gradients are taken of the GLOBAL loss ``psum_q J(theta_q)`` so
+  the fully-coupled mode differentiates through ppermute (its transpose is the
+  reversed ppermute); with the paper-faithful ``stop_gradient`` on received halos the
+  same construction degenerates to the paper's independent per-subdomain gradients.
+
+* :class:`ReferenceTrainer` — bit-identical semantics on ONE device (vmap over the
+  stacked subdomain axis + neighbor gathers).  Oracle for the equivalence tests, and
+  the practical path when #devices < #subdomains.
+
+* :class:`DataParallelTrainer` — the paper's Fig 1a baseline: one network, points
+  sharded across workers, gradient allreduce (+ optional int8/top-k compression with
+  error feedback), lr scaled by world size (Goyal et al. [21]).
+
+Straggler mitigation / communication avoidance: ``local_steps = k`` runs k Adam
+steps per halo exchange (received payloads frozen in between) — beyond-paper, see
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import halo, losses, nets
+from repro.core.domain import Decomposition, Topology
+from repro.core.losses import CPINN, XPINN, LossWeights, SubBatch
+from repro.core.nets import SubdomainModelConfig
+from repro.core.pdes import PDE
+from repro.optim import adam as adam_lib
+from repro.optim.compress import CompressionConfig, compress_decompress
+
+
+@dataclass(frozen=True)
+class DDConfig:
+    method: int = XPINN
+    weights: LossWeights = field(default_factory=LossWeights)
+    couple_gradients: bool = False   # beyond-paper: grads flow through the exchange
+    local_steps: int = 1             # k Adam steps per halo exchange (k=1: Algorithm 1)
+    adam: adam_lib.AdamConfig = field(default_factory=adam_lib.AdamConfig)
+    disable_exchange: bool = False   # benchmark ablation: comm replaced by own payload
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: jax.Array
+
+
+class _DDCommon:
+    """Shared setup + per-subdomain step body."""
+
+    def __init__(
+        self,
+        pde: PDE,
+        model_cfg: SubdomainModelConfig,
+        topo: Topology,
+        cfg: DDConfig,
+        act_codes: Sequence[str | int] | None = None,
+        lrs: float | Sequence[float] = 1e-3,
+        width_fracs: dict[str, Sequence[float]] | None = None,
+    ):
+        self.pde, self.model_cfg, self.topo, self.cfg = pde, model_cfg, topo, cfg
+        n = topo.n_sub
+        self._act_codes_in = act_codes
+        self.lrs = jnp.full((n,), float(lrs)) if np.isscalar(lrs) else jnp.asarray(
+            np.array(lrs, np.float32)
+        )
+        assert self.lrs.shape == (n,)
+        # per-subdomain width masks (paper: per-subdomain architecture freedom)
+        self.width_masks = None
+        if width_fracs is not None:
+            self.width_masks = {}
+            for name, fr in width_fracs.items():
+                w = model_cfg.nets[name].width
+                m = np.zeros((n, w), np.float32)
+                for q, f in enumerate(fr):
+                    m[q, : max(1, int(round(f * w)))] = 1.0
+                self.width_masks[name] = jnp.asarray(m)
+
+    def init(self, seed: int = 0) -> TrainState:
+        params, self.act_codes = nets.stacked_init(
+            self.model_cfg, self.topo.n_sub, jax.random.PRNGKey(seed), self._act_codes_in
+        )
+        opt = adam_lib.init_adam(params)
+        return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32))
+
+    # ---- single-subdomain pieces (no stacked axis) -------------------------------
+    def _payload(self, params, act_code, wmask, batch: SubBatch):
+        p = losses.interface_payload(
+            self.pde, self.model_cfg, self.cfg.method, params, act_code, wmask, batch.iface_pts
+        )
+        return losses.payload_dot_normal(p, batch.iface_nrm, self.cfg.method)
+
+    def _loss(self, params, act_code, wmask, batch: SubBatch, recv, own):
+        return losses.subdomain_loss(
+            self.pde, self.model_cfg, self.cfg.method, self.cfg.weights,
+            params, act_code, wmask, batch, recv["u"], recv["g"], own=own,
+        )
+
+    def _maybe_stop(self, recv):
+        if self.cfg.couple_gradients:
+            return recv
+        return jax.tree.map(jax.lax.stop_gradient, recv)
+
+    def _wmask_q(self, q_slice):
+        if self.width_masks is None:
+            return None
+        return {k: v[q_slice] for k, v in self.width_masks.items()}
+
+
+class ReferenceTrainer(_DDCommon):
+    """Single-device oracle: vmap over subdomains + gather exchange."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.step = jax.jit(self._step)
+
+    def _step(self, state: TrainState, batch: SubBatch) -> tuple[TrainState, dict]:
+        wm = self.width_masks  # dict of (n_sub, w) or None (None = empty pytree: vmap ok)
+        payload_of = lambda p: jax.vmap(self._payload)(p, self.act_codes, wm, batch)
+
+        def one_inner(carry, recv):
+            params, opt = carry
+
+            def global_loss(p):
+                own = payload_of(p)
+                total, terms = jax.vmap(self._loss)(p, self.act_codes, wm, batch, recv, own)
+                return jnp.sum(total), terms
+
+            (_, terms), grads = jax.value_and_grad(global_loss, has_aux=True)(params)
+            new_params, new_opt = adam_lib.adam_update(grads, opt, params, self.lrs, self.cfg.adam)
+            return (new_params, new_opt), terms
+
+        # communicate once per outer step (Algorithm 1), then k local updates
+        own0 = payload_of(state.params)
+        if self.cfg.disable_exchange:
+            recv = self._maybe_stop(own0)
+        else:
+            recv = self._maybe_stop(halo.exchange_tree_gather(own0, self.topo))
+        carry, terms = (state.params, state.opt), None
+        for _ in range(self.cfg.local_steps):
+            carry, terms = one_inner(carry, recv)
+        params, opt = carry
+        return TrainState(params=params, opt=opt, step=state.step + 1), terms
+
+
+class DistributedDDTrainer(_DDCommon):
+    """shard_map over the ("sub",) mesh — one device per subdomain (Algorithm 1)."""
+
+    def __init__(self, *args, mesh: Mesh | None = None, **kw):
+        super().__init__(*args, **kw)
+        n = self.topo.n_sub
+        if mesh is None:
+            devs = jax.devices()
+            assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
+            mesh = Mesh(np.array(devs[:n]), ("sub",))
+        assert mesh.shape["sub"] == n
+        self.mesh = mesh
+        self.step = self._build_step()
+
+    def init(self, seed: int = 0) -> TrainState:
+        state = super().init(seed)
+        # per-subdomain Adam step counter so every leaf carries the stacked axis
+        state.opt["count"] = jnp.zeros((self.topo.n_sub,), jnp.int32)
+        return state
+
+    def _build_step(self):
+        spec = P("sub")
+        cfg = self.cfg
+
+        def local_step(params, opt, step, act_code, lr, wmask, batch: SubBatch):
+            # leading axis is the local shard (size 1): squeeze
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            params, opt_l = sq(params), sq(opt)
+            act_code, lr = act_code[0], lr[0]
+            batch = sq(batch)
+            wmask = sq(wmask)
+
+            def payload_of(p):
+                return self._payload(p, act_code, wmask, batch)
+
+            own0 = payload_of(params)
+            if cfg.disable_exchange:
+                recv = self._maybe_stop(own0)
+            else:
+                recv = self._maybe_stop(halo.exchange_tree_ppermute(own0, self.topo, "sub"))
+
+            def one_inner(carry, _):
+                p, o = carry
+
+                def global_loss(pp):
+                    own = payload_of(pp)
+                    total, terms = self._loss(pp, act_code, wmask, batch, recv, own)
+                    return jax.lax.psum(total, "sub"), terms
+
+                (_, terms), g = jax.value_and_grad(global_loss, has_aux=True)(p)
+                p2, o2 = adam_lib.adam_update(g, o, p, lr, cfg.adam)
+                return (p2, o2), terms
+
+            (params, opt_l), terms = (params, opt_l), None
+            for _ in range(cfg.local_steps):
+                (params, opt_l), terms = one_inner((params, opt_l), None)
+
+            unsq = lambda t: jax.tree.map(lambda x: x[None], t)
+            return unsq(params), unsq(opt_l), step + 1, unsq(terms)
+
+        shmapped = jax.shard_map(
+            local_step,
+            mesh=self.mesh,
+            in_specs=(spec, spec, P(), spec, spec, spec, spec),
+            out_specs=(spec, spec, P(), spec),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def step(state: TrainState, batch: SubBatch):
+            p, o, s, terms = shmapped(
+                state.params, state.opt, state.step, self.act_codes, self.lrs,
+                self.width_masks, batch,
+            )
+            return TrainState(params=p, opt=o, step=s), terms
+
+        return step
+
+    def shard_batch(self, batch: SubBatch) -> SubBatch:
+        sh = NamedSharding(self.mesh, P("sub"))
+        return jax.tree.map(lambda x: jax.device_put(x, sh), batch)
+
+    def shard_state(self, state: TrainState) -> TrainState:
+        sh = NamedSharding(self.mesh, P("sub"))
+        rep = NamedSharding(self.mesh, P())
+        return TrainState(
+            params=jax.tree.map(lambda x: jax.device_put(x, sh), state.params),
+            opt=jax.tree.map(
+                lambda x: jax.device_put(x, sh if x.ndim > 0 else rep), state.opt
+            ),
+            step=jax.device_put(state.step, rep),
+        )
+
+
+class DataParallelTrainer:
+    """Paper Fig 1a: same net on every worker, sharded points, gradient allreduce."""
+
+    def __init__(
+        self,
+        pde: PDE,
+        model_cfg: SubdomainModelConfig,
+        n_workers: int,
+        weights: LossWeights = LossWeights(),
+        lr: float = 1e-3,
+        scale_lr: bool = True,  # Goyal et al. [21]: lr *= world size
+        compression: CompressionConfig | None = None,
+        mesh: Mesh | None = None,
+        adam_cfg: adam_lib.AdamConfig = adam_lib.AdamConfig(),
+    ):
+        self.pde, self.model_cfg, self.weights = pde, model_cfg, weights
+        self.n = n_workers
+        self.lr = lr * (n_workers if scale_lr else 1)
+        self.compression = compression
+        self.adam_cfg = adam_cfg
+        if mesh is None:
+            devs = jax.devices()
+            assert len(devs) >= n_workers
+            mesh = Mesh(np.array(devs[:n_workers]), ("sub",))
+        self.mesh = mesh
+        self.step = self._build_step()
+
+    def init(self, seed: int = 0):
+        params = nets.init_model(self.model_cfg, jax.random.PRNGKey(seed))
+        opt = adam_lib.init_adam(params)
+        err = jax.tree.map(jnp.zeros_like, params) if self.compression else None
+        return {"params": params, "opt": opt, "err": err, "step": jnp.zeros((), jnp.int32)}
+
+    def _build_step(self):
+        comp = self.compression
+
+        def local_step(params, opt, err, step, batch: SubBatch):
+            batch = jax.tree.map(lambda x: x[0], batch)
+
+            def loss_fn(p):
+                return losses.vanilla_pinn_loss(
+                    self.pde, self.model_cfg, self.weights, p, nets.ACT_TANH, None, batch
+                )
+
+            (_, terms), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+            if comp is not None:
+                g, err_new = compress_decompress(g, err, comp)
+            else:
+                err_new = err
+            # the paper's distributed optimizer: allreduce-mean of loss gradients
+            g = jax.lax.pmean(g, "sub")
+            new_params, new_opt = adam_lib.adam_update(g, opt, params, self.lr, self.adam_cfg)
+            terms = jax.lax.pmean(terms, "sub")
+            return new_params, new_opt, err_new, step + 1, terms
+
+        spec_b = P("sub")
+        err_spec = P() if self.compression else P()
+        shmapped = jax.shard_map(
+            local_step,
+            mesh=self.mesh,
+            in_specs=(P(), P(), err_spec, P(), spec_b),
+            out_specs=(P(), P(), err_spec, P(), P()),
+            check_vma=False,
+        )
+
+        @jax.jit
+        def step(state, batch: SubBatch):
+            p, o, e, s, terms = shmapped(
+                state["params"], state["opt"], state["err"], state["step"], batch
+            )
+            return {"params": p, "opt": o, "err": e, "step": s}, terms
+
+        return step
+
+
+# ----------------------------------------------------------------------- evaluation
+
+def evaluate_l2(
+    decomp: Decomposition,
+    model_cfg: SubdomainModelConfig,
+    params,
+    act_codes,
+    pde: PDE,
+    n_pts: int = 2000,
+    seed: int = 0,
+    width_masks=None,
+) -> float:
+    """Relative L2 error of the stitched solution (eq. 4) against pde.exact."""
+    rng = np.random.default_rng(seed)
+    errs, refs = [], []
+    for q in range(decomp.n_sub):
+        pts = decomp.sample_interior(q, n_pts // decomp.n_sub + 1, rng)
+        ex = pde.exact(pts)
+        if ex is None:
+            raise ValueError("PDE has no exact solution")
+        p_q = jax.tree.map(lambda x: x[q], params)
+        wm = None if width_masks is None else {k: v[q] for k, v in width_masks.items()}
+        pred = nets.model_apply(model_cfg, p_q, jnp.asarray(pts, jnp.float32),
+                                act_codes[q], wm)
+        errs.append(np.asarray(pred) - ex)
+        refs.append(ex)
+    e = np.concatenate(errs).ravel()
+    r = np.concatenate(refs).ravel()
+    return float(np.linalg.norm(e) / (np.linalg.norm(r) + 1e-30))

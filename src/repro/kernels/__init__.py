@@ -1,0 +1,7 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU; compiled on TPU).
+
+pinn_mlp        — fused PINN MLP forward + input-Jacobian (the paper's Fig-4
+                  hot spot: residual/interface evaluation).
+flash_attention — causal GQA flash attention (32k-prefill roofline hot spot).
+"""
+from repro.kernels.ops import flash_attention, pinn_mlp_forward

@@ -1,0 +1,101 @@
+"""Causal GQA flash-attention Pallas TPU kernel (prefill hot-spot).
+
+Online-softmax attention with BlockSpec VMEM tiling: grid = (B, H, nq, nk); the
+kv-block axis is the innermost (sequential) grid dim, so the (m, l, acc) running
+statistics live in VMEM scratch across kv iterations of one q block.  Causal
+skipping: kv blocks strictly above the diagonal contribute nothing and are
+skipped via ``pl.when`` (keeps the MXU off the masked region — at 32k prefill
+that's ~2x fewer score FLOPs).  GQA maps query head h to kv head h // G inside
+the BlockSpec index maps, so no K/V replication is materialized.
+
+Forward-only by design: training uses the XLA chunked-attention path (remat needs
+a differentiable graph); this kernel serves prefill/serving, which is where the
+q*k' score traffic dominates the roofline (see EXPERIMENTS.md §Perf).
+
+``ops.flash_attention`` wraps (pads head_dim to 128 lanes, picks interpret mode on
+CPU); ``ref.attention_ref`` is the oracle; tests sweep shapes/dtypes/causality.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, bq, bk, nk):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)               # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bk, dh)
+        s = (q @ k.T) * scale                              # (bq, bk)
+        if causal:
+            q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + p @ v
+        m_scr[...] = m_new
+
+    if causal:
+        # kv blocks strictly above the diagonal contribute nothing: skip them
+        pl.when(ki * bk <= qi * bq + bq - 1)(_body)
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, bq=256, bk=256,
+                           interpret=False):
+    """q: (B, H, S, dh); k/v: (B, Hk, T, dh); dh must be lane-aligned (pad first).
+
+    Returns (B, H, S, dh) attention output.
+    """
+    B, H, S, dh = q.shape
+    _, Hk, T, _ = k.shape
+    G = H // Hk
+    bq, bk = min(bq, S), min(bk, T)
+    assert S % bq == 0 and T % bk == 0
+    nq, nk = S // bq, T // bk
+    scale = 1.0 / np.sqrt(dh)
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

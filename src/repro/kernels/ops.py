@@ -1,0 +1,91 @@
+"""Jit'd public wrappers for the Pallas kernels: padding, dispatch, interpret-mode
+selection (TPU targets compiled kernels; CPU validates via interpret=True)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pinn_mlp import WPAD, pinn_mlp_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, n, axis):
+    pad = n - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("act", "block_n", "interpret"))
+def pinn_mlp_forward(x, Ws, bs, a, act="tanh", block_n=256, interpret=None):
+    """Fused PINN MLP forward + input-Jacobian.
+
+    x: (N, d_in); Ws: list[(in,out)]; bs: list[(out,)]; a: (n_hidden,) slopes.
+    Returns (u (N, out), du (d_in, N, out)).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, d_in = x.shape
+    out_dim = Ws[-1].shape[1]
+    L = len(Ws)
+    # pad weights into a (L, WPAD, WPAD) stack
+    w_stack = jnp.stack([_pad_to(_pad_to(w, WPAD, 0), WPAD, 1) for w in Ws])
+    b_stack = jnp.stack([_pad_to(b, WPAD, 0) for b in bs])
+    a_vec = _pad_to(a, L, 0)
+    n_pad = ((N + block_n - 1) // block_n) * block_n
+    x_pad = _pad_to(_pad_to(x, n_pad, 0), WPAD, 1)
+    u, du = pinn_mlp_pallas(x_pad, w_stack, b_stack, a_vec, d_in=d_in, act=act,
+                            block_n=block_n, interpret=interpret)
+    return u[:N, :out_dim], du[:, :N, :out_dim]
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, causal=True, bq=256, bk=256, interpret=None):
+    """Causal GQA flash attention. q: (B,H,S,dh); k/v: (B,Hk,T,dh)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    dh = q.shape[-1]
+    dh_pad = max(128, ((dh + 127) // 128) * 128)
+    qp = _pad_to(q, dh_pad, 3)
+    kp = _pad_to(k, dh_pad, 3)
+    vp = _pad_to(v, dh_pad, 3)
+    # keep the softmax scale of the TRUE head dim
+    qp = qp * float(np.sqrt(dh_pad / dh))  # keep weak type: combined scale = 1/sqrt(dh)
+    bq = min(bq, q.shape[2])
+    bk = min(bk, k.shape[2])
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out[..., :dh]
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, chunk=64, interpret=None):
+    """WKV6 linear attention. r/k/v/w: (B, T, H, P); u: (H, P). Returns (B,T,H,P)."""
+    from repro.kernels.wkv6 import wkv6_pallas
+
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, H, P = r.shape
+    P_pad = max(128, ((P + 127) // 128) * 128)
+    def prep(x):
+        x = _pad_to(x, P_pad, 3)
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, P_pad)
+    up = _pad_to(u, P_pad, 1)
+    up = jnp.broadcast_to(up[None], (B, H, P_pad)).reshape(B * H, P_pad)
+    wp = prep(w)
+    if P_pad != P:  # padded decay channels must not blow up cumsum(log w)
+        pad_mask = jnp.arange(P_pad) >= P
+        wp = jnp.where(pad_mask[None, None, :], 1.0, wp)
+    y = wkv6_pallas(prep(r), prep(k), prep(v), wp, up, chunk=chunk,
+                    interpret=interpret)
+    y = y.reshape(B, H, T, P_pad).transpose(0, 2, 1, 3)
+    return y[..., :P]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pinn_mlp_ref(x, Ws, bs, a, act="tanh"):
+    """Reference fused forward + input-Jacobian.
+
+    x: (N, d_in); Ws: list of (in, out); bs: list of (out,); a: (n_hidden,).
+    Returns u (N, out) and du (d_in, N, out) computed with jax.jvp (exact AD).
+    """
+    phi = {"tanh": jnp.tanh, "sin": jnp.sin, "cos": jnp.cos}[act]
+
+    def fwd(xi):
+        h = xi @ Ws[0] + bs[0]
+        for l in range(len(Ws) - 1):
+            h = phi(a[l] * h)
+            h = h @ Ws[l + 1] + bs[l + 1]
+        return h
+
+    u = fwd(x)
+    d_in = x.shape[1]
+    dus = []
+    for j in range(d_in):
+        v = jnp.zeros_like(x).at[:, j].set(1.0)
+        dus.append(jax.jvp(fwd, (x,), (v,))[1])
+    return u, jnp.stack(dus, axis=0)
+
+
+def attention_ref(q, k, v, causal=True):
+    """Plain softmax attention oracle. q: (B,H,S,dh); k/v: (B,Hk,T,dh)."""
+    B, H, S, dh = q.shape
+    Hk, T = k.shape[1], k.shape[2]
+    G = H // Hk
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / np.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, T), bool), k=T - S)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vv.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""WKV6 (RWKV-6 "Finch") chunked linear-attention Pallas TPU kernel.
+
+The rwkv6-3b prefill cell's hot loop is the WKV recurrence.  The XLA chunked path
+(models/ssm.py) materializes (c, c, H, P) decay tensors in HBM; this kernel keeps
+the running (P, P) state and all chunk-local tensors in VMEM:
+
+grid = (B*H, T/c) with the chunk axis innermost (sequential) — state persists in
+VMEM scratch across chunk steps of one (batch, head) program:
+
+  intra-chunk:  a_ij = sum_p r_ip k_jp exp(seg_{i-1} - seg_j)   (j < i, see ssm.py)
+  inter-chunk:  y_i += (r_i * exp(seg_{i-1})) @ S ;  S <- S * exp(seg_c) + K~^T V
+
+Forward-only (serving/prefill); training keeps the differentiable XLA path.
+Oracle: models.ssm._wkv6_chunked / ref via tests/test_kernels_wkv6.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_scr, *, chunk, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0].astype(jnp.float32)          # (c, P)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)          # (1, P) bonus row
+    c = r.shape[0]
+
+    logw = jnp.log(w + 1e-38)
+    seg = jnp.cumsum(logw, axis=0)            # (c, P) inclusive cumulative log-decay
+    esc = seg - logw                          # exclusive (state read before step decay)
+
+    # ---- intra-chunk: pairwise decayed scores, strictly causal ---------------
+    # NOTE: the factored (r e^esc)(k e^-seg)^T form overflows for strong decay
+    # (e^-seg grows like w^-c); the pairwise exponent esc_i - seg_j is <= 0 and
+    # safe.  (c, c, P) lives in VMEM: chunk 64 x 64 x 128 fp32 = 2MiB.
+    diff = esc[:, None, :] - seg[None, :, :]            # (c, c, P), <= 0 for j < i
+    mask = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    dec = jnp.where(mask[:, :, None], jnp.exp(diff), 0.0)
+    a = jnp.einsum("ip,jp,ijp->ij", r, k, dec)
+    bonus = jnp.sum(r * u * k, axis=1, keepdims=True)   # (c, 1) diagonal term
+    y = a @ v + bonus * v
+
+    # ---- inter-chunk: carried state ------------------------------------------
+    S = state_scr[...]                        # (P, P)
+    y = y + (r * jnp.exp(esc)) @ S
+    decay_to_end = jnp.exp(seg[-1][None, :] - seg)       # (c, P)
+    state_scr[...] = S * jnp.exp(seg[-1])[:, None] + (k * decay_to_end).T @ v
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def wkv6_pallas(r, k, v, w, u, *, chunk=64, interpret=False):
+    """r/k/v/w: (BH, T, P) merged batch*head leading dim; w in (0,1); u: (BH, P).
+
+    Returns y: (BH, T, P).  P should be lane-aligned (pad to 128 upstream).
+    """
+    BH, T, P = r.shape
+    c = min(chunk, T)
+    assert T % c == 0
+    n_chunks = T // c
+    kernel = functools.partial(_kernel, chunk=c, n_chunks=n_chunks)
+    spec = pl.BlockSpec((1, c, P), lambda b, i: (b, i, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[spec, spec, spec,
+                  spec,
+                  pl.BlockSpec((1, P), lambda b, i: (b, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((BH, T, P), r.dtype),
+        scratch_shapes=[pltpu.VMEM((P, P), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so importing
+this module never touches jax device state.  The dry-run entry point sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE any jax import;
+ordinary tests/benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_pinn_mesh(n_sub: int) -> Mesh:
+    """1-D mesh, one device per subdomain (Algorithm 1's communicator)."""
+    devs = jax.devices()
+    if len(devs) < n_sub:
+        raise RuntimeError(f"PINN mesh needs {n_sub} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:n_sub]), ("sub",))
+
+
+# TPU v5e single-chip peaks used by the roofline analysis (see EXPERIMENTS.md)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link

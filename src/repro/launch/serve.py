@@ -1,0 +1,83 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+
+  python -m repro.launch.serve --arch llama3.2-1b --reduced \
+      --batch 4 --prompt-len 32 --gen 32
+
+Uses the same ``decode_step`` that the decode_32k/long_500k dry-run cells lower,
+so the serving path exercised here is the one proven on the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.models import layers as L
+
+
+def generate(model, params, prompts: jnp.ndarray, max_len: int, gen: int):
+    """Greedy decode. prompts: (B, P) int32. Returns (B, P+gen)."""
+    cfg = model.cfg
+    B, P = prompts.shape
+    cache = model.init_cache(B, max_len)
+    if cfg.family == "encdec":
+        rng = np.random.default_rng(0)
+        frames = jnp.asarray(rng.normal(0, 1, (B, max(1, max_len // cfg.enc_ratio),
+                                                cfg.d_model)), jnp.dtype(cfg.dtype))
+        mem = model.encode(params, frames)
+        cks, cvs = [], []
+        for l in range(cfg.n_dec_layers):
+            lp = jax.tree.map(lambda v: v[l], params["dec"])
+            _, mk, mv = L.gqa_project(lp["cross_attn"], mem, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.hd, mem.dtype)
+            cks.append(mk), cvs.append(mv)
+        cache = dict(cache)
+        cache["cross_k"], cache["cross_v"] = jnp.stack(cks), jnp.stack(cvs)
+
+    decode = jax.jit(model.decode_step)
+    toks = [prompts[:, i] for i in range(P)]
+    logits = None
+    for t in range(P + gen - 1):
+        cur = toks[t][:, None]
+        logits, cache = decode(params, cache, {"tokens": cur}, t)
+        if t >= P - 1:
+            toks.append(jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32))
+    return jnp.stack(toks, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+                          jnp.int32)
+    max_len = args.prompt_len + args.gen
+    t0 = time.time()
+    out = generate(model, params, prompts, max_len, args.gen)
+    dt = time.time() - t0
+    n_new = args.batch * args.gen
+    print(f"[serve] generated {n_new} tokens in {dt:.2f}s "
+          f"({n_new / dt:.1f} tok/s incl. compile)")
+    print(f"[serve] sample: {np.asarray(out[0, -args.gen:])}")
+    assert out.shape == (args.batch, max_len)
+
+
+if __name__ == "__main__":
+    main()

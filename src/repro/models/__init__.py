@@ -1,0 +1,2 @@
+from repro.models.api import batch_struct, build_model, make_batch
+from repro.models.sharding import rules_for, use_rules

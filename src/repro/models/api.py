@@ -1,0 +1,77 @@
+"""Model registry + canonical batch builders for every (arch x shape) cell.
+
+``build_model(cfg)`` returns the family's model object (CausalLM or a subclass).
+``make_batch`` builds concrete arrays (smoke tests / the train driver);
+``batch_struct`` builds ShapeDtypeStructs (the dry-run — no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# block registration side effects
+from repro.models import dense as _dense  # noqa: F401
+from repro.models import mla as _mla      # noqa: F401
+from repro.models import moe as _moe      # noqa: F401
+from repro.models import ssm as _ssm      # noqa: F401
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.causal_lm import CausalLM
+from repro.models.encdec import EncDecModel
+from repro.models.zamba import Zamba2Model
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "hybrid":
+        return Zamba2Model(cfg)
+    if cfg.family == "encdec":
+        return EncDecModel(cfg)
+    return CausalLM(cfg)
+
+
+def _token_shapes(cfg: ModelConfig, shape: ShapeConfig, kind: str):
+    """Returns dict name -> (shape, dtype) for the given entry point."""
+    B, S = shape.global_batch, shape.seq_len
+    t = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if kind == "train":
+        out = {"tokens": ((B, S), t), "labels": ((B, S), t)}
+        if cfg.family == "vlm":
+            out["tokens"] = ((B, S - cfg.n_patches), t)
+            out["labels"] = ((B, S - cfg.n_patches), t)
+            out["patch_embeds"] = ((B, cfg.n_patches, cfg.patch_dim), f)
+        if cfg.family == "encdec":
+            out["frames"] = ((B, max(1, S // cfg.enc_ratio), cfg.d_model), f)
+        return out
+    if kind == "prefill":
+        out = {"tokens": ((B, S), t)}
+        if cfg.family == "vlm":
+            out["tokens"] = ((B, S - cfg.n_patches), t)
+            out["patch_embeds"] = ((B, cfg.n_patches, cfg.patch_dim), f)
+        if cfg.family == "encdec":
+            out["frames"] = ((B, max(1, S // cfg.enc_ratio), cfg.d_model), f)
+        return out
+    if kind == "decode":
+        return {"tokens": ((B, 1), t)}
+    raise ValueError(kind)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, kind: str | None = None) -> dict:
+    kind = kind or shape.kind
+    return {
+        k: jax.ShapeDtypeStruct(s, d)
+        for k, (s, d) in _token_shapes(cfg, shape, kind).items()
+    }
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, kind: str | None = None, seed: int = 0) -> dict:
+    """Deterministic synthetic batch (the data pipeline for smoke/e2e on CPU)."""
+    kind = kind or shape.kind
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, (s, d) in _token_shapes(cfg, shape, kind).items():
+        if d == jnp.int32:
+            out[k] = jnp.asarray(rng.integers(0, cfg.vocab, size=s), jnp.int32)
+        else:
+            out[k] = jnp.asarray(rng.normal(0, 1, size=s), d)
+    return out

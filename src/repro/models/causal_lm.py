@@ -1,0 +1,233 @@
+"""Decoder-only LM assembly, generic over per-family block definitions.
+
+A family registers a :class:`BlockDef` (per-layer init / logical axes / apply /
+cache builders).  The assembly provides: embedding, scan-over-layers with remat,
+final norm + LM head, the three lowered entry points (``train_step`` loss,
+``prefill``, ``decode_step``), cache construction, and PartitionSpec trees.
+
+The VLM family (`llava-next-mistral-7b`) reuses the dense block; its stub
+frontend contributes precomputed patch embeddings that are projected and
+prepended to the token embeddings (anyres tiling is upstream of the backbone and
+out of scope per the assignment).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.sharding import constrain, specs_from_logical
+
+
+@dataclass(frozen=True)
+class BlockDef:
+    init: Callable          # (rng, cfg) -> layer params
+    logical: Callable       # (cfg) -> logical tree
+    apply: Callable         # (cfg, lp, x, lc, ctx) -> (y, new_lc)
+    init_cache: Callable | None = None   # (cfg, B, T, dtype) -> per-layer cache
+    cache_logical: Callable | None = None
+
+BLOCKS: dict[str, BlockDef] = {}
+
+
+def register_block(family: str, block: BlockDef):
+    BLOCKS[family] = block
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+class CausalLM:
+    """Pure-function model bundle for one config."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.block = BLOCKS[cfg.family]
+        # leading dense layers outside the homogeneous stack (deepseek-moe)
+        self.prelude = BLOCKS["dense"] if cfg.first_dense else None
+        self._n_main = cfg.n_layers - cfg.first_dense
+
+    def _prelude_cfg(self) -> ModelConfig:
+        import dataclasses
+        d_ff = getattr(self.cfg, "d_ff_dense", 0) or self.cfg.d_ff
+        return dataclasses.replace(self.cfg, family="dense", d_ff=d_ff)
+
+    # ------------------------------------------------------------------ params
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        ks = L.split_tree(rng, 6)
+        p = {
+            "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+            "layers": L.stack_init(lambda k: self.block.init(k, cfg), ks[1], self._n_main),
+            "final_norm": jnp.ones((cfg.d_model,)),
+        }
+        if self.prelude:
+            pc = self._prelude_cfg()
+            p["prelude"] = L.stack_init(lambda k: self.prelude.init(k, pc), ks[4], cfg.first_dense)
+        if not cfg.tie_embeddings:
+            p["head"] = L.init_lm_head(ks[2], cfg.d_model, cfg.padded_vocab)
+        if cfg.family == "vlm":
+            p["vis_proj"] = {
+                "w": L.normal_init(ks[3], (cfg.patch_dim, cfg.d_model)),
+                "b": jnp.zeros((cfg.d_model,)),
+            }
+        return p
+
+    def logical(self) -> dict:
+        cfg = self.cfg
+        t = {
+            "embed": L.embedding_logical(),
+            "layers": self.block.logical(cfg),
+            "final_norm": ("embed",),
+        }
+        if self.prelude:
+            t["prelude"] = self.prelude.logical(self._prelude_cfg())
+        if not cfg.tie_embeddings:
+            t["head"] = L.lm_head_logical()
+        if cfg.family == "vlm":
+            t["vis_proj"] = {"w": (None, "embed"), "b": ("embed",)}
+        return t
+
+    def param_specs(self, rules):
+        return specs_from_logical(self.logical(), rules)
+
+    # ------------------------------------------------------------------- cache
+    def _stacked_cache(self, block, cfg, n_layers, B, T, as_struct):
+        one = jax.eval_shape(lambda: block.init_cache(cfg, B, T, _dtype(cfg)))
+        if as_struct:
+            return jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_layers,) + s.shape, s.dtype), one
+            )
+        return jax.tree.map(lambda s: jnp.zeros((n_layers,) + s.shape, s.dtype), one)
+
+    def _cache(self, B, T, as_struct):
+        cfg = self.cfg
+        if self.block.init_cache is None:
+            return None
+        main = self._stacked_cache(self.block, cfg, self._n_main, B, T, as_struct)
+        if not self.prelude:
+            return main
+        pre = self._stacked_cache(self.prelude, self._prelude_cfg(), cfg.first_dense, B, T, as_struct)
+        return {"prelude": pre, "layers": main}
+
+    def init_cache(self, batch_size: int, seq_len: int):
+        return self._cache(batch_size, seq_len, as_struct=False)
+
+    def cache_struct(self, batch_size: int, seq_len: int):
+        """ShapeDtypeStructs for the dry-run (no allocation)."""
+        return self._cache(batch_size, seq_len, as_struct=True)
+
+    def cache_specs(self, rules):
+        if self.block.cache_logical is None:
+            return None
+        add_L = lambda t: jax.tree.map(lambda dims: (None,) + dims, t,
+                                       is_leaf=lambda v: isinstance(v, tuple))
+        main = specs_from_logical(add_L(self.block.cache_logical(self.cfg)), rules)
+        if not self.prelude:
+            return main
+        pre = specs_from_logical(add_L(self.prelude.cache_logical(self._prelude_cfg())), rules)
+        return {"prelude": pre, "layers": main}
+
+    # ----------------------------------------------------------------- forward
+    def _embed_inputs(self, params, batch, dtype):
+        cfg = self.cfg
+        x = L.embed(params["embed"], batch["tokens"], dtype)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(dtype)
+            pe = pe @ params["vis_proj"]["w"].astype(dtype) + params["vis_proj"]["b"].astype(dtype)
+            pe = constrain(pe, "batch", "seq", "act_embed")
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def _hidden(self, params, batch, cache=None, pos=None):
+        """Backbone up to (and including) the final norm. Returns (x, new_cache|ys)."""
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        x = self._embed_inputs(params, batch, dtype)
+        B, S = x.shape[:2]
+        if pos is None:
+            positions = jnp.arange(S)[None, :]
+        else:
+            positions = jnp.full((B, 1), pos, jnp.int32)
+        ctx = dict(positions=positions, pos=pos, q_offset=0,
+                   mode="decode" if pos is not None else "full")
+
+        main_cache, pre_cache = cache, None
+        if self.prelude and cache is not None:
+            pre_cache, main_cache = cache["prelude"], cache["layers"]
+
+        new_pre = None
+        if self.prelude:
+            pc = self._prelude_cfg()
+            pre_fn = lambda lp, h, lc: self.prelude.apply(pc, lp, h, lc, ctx)
+            x, new_pre = L.scan_layers(pre_fn, params["prelude"], x, pre_cache,
+                                       remat=cfg.remat, policy=cfg.remat_policy)
+
+        def block_fn(lp, h, lc):
+            # residual-stream carry sharding: under the "res_seq"->model rule the
+            # saved per-layer remat carries shard along sequence (Korthikanti-style
+            # sequence parallelism); XLA inserts the gather/scatter pairs.
+            h = constrain(h, "batch", "res_seq", "act_embed")
+            h, nc = self.block.apply(cfg, lp, h, lc, ctx)
+            return constrain(h, "batch", "res_seq", "act_embed"), nc
+
+        x, new_main = L.scan_layers(block_fn, params["layers"], x, main_cache,
+                                    remat=cfg.remat, policy=cfg.remat_policy)
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if self.prelude and cache is not None:
+            return x, {"prelude": new_pre, "layers": new_main}
+        return x, new_main
+
+    def _head_weight(self, params):
+        if self.cfg.tie_embeddings:
+            return params["embed"]["table"], True
+        return params["head"]["w"], False
+
+    def forward(self, params, batch, cache=None, pos=None):
+        """batch: {"tokens": (B,S) [, "patch_embeds": (B,P,pd)]}.
+
+        cache/pos given  -> decode mode (S==1), returns (logits, new_cache)
+        cache/pos absent -> full causal forward, returns (logits, None)
+        """
+        x, nc = self._hidden(params, batch, cache, pos)
+        nv = self.cfg.vocab if self.cfg.padded_vocab != self.cfg.vocab else None
+        if self.cfg.tie_embeddings:
+            logits = L.unembed(params["embed"], x, nv)
+        else:
+            logits = L.lm_head(params["head"], x, nv)
+        return logits, nc
+
+    # ------------------------------------------------------------ entry points
+    def loss(self, params, batch):
+        """Teacher-forced next-token loss via the CHUNKED fused head+CE (the full
+        fp32 logits tensor is never materialized). batch: tokens+labels (B,S)."""
+        cfg = self.cfg
+        x, ys = self._hidden(params, batch)
+        labels = batch["labels"]
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            # patch positions carry no next-token targets
+            P = batch["patch_embeds"].shape[1]
+            x = x[:, P:]
+        w, tied = self._head_weight(params)
+        loss = L.fused_head_cross_entropy(
+            x, w, labels, batch.get("loss_mask"), transpose_w=tied,
+            n_valid=cfg.vocab if cfg.padded_vocab != cfg.vocab else None)
+        if isinstance(ys, dict) and "aux" in ys:  # MoE load-balance loss
+            loss = loss + 0.01 * jnp.mean(ys["aux"])
+        return loss
+
+    def prefill(self, params, batch):
+        logits, _ = self.forward(params, batch)
+        return logits
+
+    def decode_step(self, params, cache, batch, pos):
+        """One-token step against a pre-existing cache. tokens: (B,1)."""
+        logits, new_cache = self.forward(params, batch, cache=cache, pos=pos)
+        return logits, new_cache

@@ -1,0 +1,59 @@
+"""Dense GQA transformer block (yi-34b, llama3.2-1b, qwen2.5-14b, mistral/llava)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.causal_lm import BlockDef, register_block
+
+
+def init(rng, cfg: ModelConfig):
+    ks = L.split_tree(rng, 2)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,)),
+        "attn": L.init_gqa(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                           bias=cfg.qkv_bias),
+        "mlp_norm": jnp.ones((cfg.d_model,)),
+        "mlp": L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff),
+    }
+
+
+def logical(cfg: ModelConfig):
+    add_L = lambda t: jax.tree.map(lambda dims: (None,) + dims, t,
+                                   is_leaf=lambda v: isinstance(v, tuple))
+    return {
+        "attn_norm": (None, "embed"),
+        "attn": add_L(L.gqa_logical(bias=cfg.qkv_bias)),
+        "mlp_norm": (None, "embed"),
+        "mlp": add_L(L.swiglu_logical()),
+    }
+
+
+def apply(cfg: ModelConfig, lp, x, lc, ctx):
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    attn_out, new_cache = L.attention_block(
+        lp["attn"], h, cfg=cfg, positions=ctx["positions"], cache=lc,
+        pos=ctx["pos"], causal=True, q_offset=ctx["q_offset"],
+    )
+    x = x + attn_out
+    h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + L.swiglu(lp["mlp"], h)
+    return x, new_cache
+
+
+def init_cache(cfg: ModelConfig, B, T, dtype):
+    kv = (B, T, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+
+
+def cache_logical(cfg: ModelConfig):
+    dims = ("batch", "kv_seq", "kv_heads", None)
+    return {"k": dims, "v": dims}
+
+
+BLOCK = BlockDef(init=init, logical=logical, apply=apply,
+                 init_cache=init_cache, cache_logical=cache_logical)
+register_block("dense", BLOCK)
+register_block("vlm", BLOCK)

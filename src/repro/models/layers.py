@@ -1,0 +1,435 @@
+"""Common transformer layers for the model zoo (pure functions over param dicts).
+
+Conventions
+-----------
+* Params are nested dicts of fp32 arrays (master weights); compute is bf16
+  (``cfg.dtype``), cast at use.  Layer stacks are STACKED on a leading ``L`` axis
+  and driven by ``lax.scan`` (small HLO -> fast 256-device GSPMD compiles) with
+  ``jax.checkpoint`` remat per layer.
+* Every init function has a twin ``*_logical`` returning the same tree with tuples
+  of LOGICAL axis names; ``models.sharding`` maps them to PartitionSpecs.
+* Attention is CHUNKED over query blocks (lax.scan + online max-free softmax per
+  block) so 32k-token prefill never materializes an S x T score tensor.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sharding import constrain
+
+# Dry-run measurement mode: XLA's cost_analysis counts while-loop bodies ONCE, so
+# scanned graphs under-report FLOPs by the trip count.  Setting unroll mode makes
+# every structural scan (layer stack, attention q-blocks, fused-CE chunks) fully
+# unroll so the compiled HLO carries the true op counts.  Execution semantics are
+# identical; compile time grows, which is why it is opt-in (launch/dryrun.py).
+_UNROLL_SCANS = False
+
+
+def set_unroll_scans(v: bool):
+    global _UNROLL_SCANS
+    _UNROLL_SCANS = bool(v)
+
+
+def _unroll(n: int) -> int:
+    return n if _UNROLL_SCANS else 1
+
+# ------------------------------------------------------------------------- init
+
+def normal_init(rng, shape, std=0.02, dtype=jnp.float32):
+    return jax.random.normal(rng, shape, dtype) * std
+
+
+def split_tree(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# ------------------------------------------------------------------------ norms
+
+def rms_norm(x, w, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + 0.0) * w.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=1e4):
+    """x: (B, S, H, dh); positions: (B, S) or (S,)"""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta))            # (dh/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1, o2 = x1 * cos - x2 * sin, x2 * cos + x1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+
+
+# -------------------------------------------------------------------- attention
+
+def chunked_attention(q, k, v, *, causal=True, q_offset=0, block_q=512, kv_len=None,
+                      causal_skip=False):
+    """GQA attention without materializing the full (S, T) score tensor.
+
+    q: (B, S, H, dh); k/v: (B, T, Hk, dh), H % Hk == 0.
+    q_offset: absolute position of q[0] (causal masking for prefill chunks).
+    kv_len: optional (B,) valid cache lengths (decode); None -> all T valid.
+    causal_skip: python-loop the q blocks and slice k/v to the causal extent
+      (i+1)*bq per block — true triangular FLOPs (~2x fewer score/softmax ops at
+      long S), at the cost of a larger per-layer HLO (no scan).  This is the XLA
+      analogue of the flash-attention kernel's diagonal block skipping.
+    """
+    B, S, H, dh = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(B, S, Hk, G, dh)
+    bq = min(block_q, S)
+    n_blocks = (S + bq - 1) // bq
+    pad = n_blocks * bq - S
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+    qg = qg.reshape(B, n_blocks, bq, Hk, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    t_idx = jnp.arange(T)
+
+    def one_block(i, qi):  # qi: (B, bq, Hk, G, dh) -> scores (B, Hk, G, bq, T)
+        s = jnp.einsum("bqkgd,btkd->bkgqt", qi.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        if causal:
+            q_pos = q_offset + i * bq + jnp.arange(bq)
+            cmask = t_idx[None, :] <= q_pos[:, None]            # (bq, T)
+            s = jnp.where(cmask[None, None, None], s, -1e30)
+        if kv_len is not None:
+            valid = t_idx[None, :] < kv_len[:, None]            # (B, T)
+            s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        # cast per-block outputs to the compute dtype BEFORE stacking across
+        # q-blocks: the fp32 stacked buffer costs ~2GB/layer at yi-34b train_4k
+        return jnp.einsum("bkgqt,btkd->bqkgd", p,
+                          v.astype(jnp.float32)).astype(v.dtype)
+
+    dv = v.shape[-1]  # v head dim may differ from qk head dim (MLA)
+    if n_blocks == 1:
+        out = one_block(0, qg[0])[None]
+    elif causal_skip and causal and q_offset == 0 and kv_len is None:
+        # BUCKETED causal skip: 4 buckets of q blocks, bucket i attends only
+        # k/v[: (i+1) * T/4] (static slice).  Within a bucket the blocks run under
+        # lax.scan, so liveness stays one-block-deep (the fully per-block python
+        # loop saved 50% FLOPs but blew per-device HBM 3->27GiB on minicpm3
+        # prefill_32k; 4 buckets keep ~37.5% of the saving at scan liveness).
+        n_buckets = min(4, n_blocks)
+        per = n_blocks // n_buckets
+        outs = []
+        for bi in range(n_buckets):
+            lo, hi = bi * per, (n_blocks if bi == n_buckets - 1 else (bi + 1) * per)
+            end = min(T, hi * bq)
+            kb, vb = k[:, :end], v[:, :end]
+            tb_idx = jnp.arange(end)
+
+            def bucket_block(i, qi, kb=kb, vb=vb, tb_idx=tb_idx):
+                sb = jnp.einsum("bqkgd,btkd->bkgqt", qi.astype(jnp.float32),
+                                kb.astype(jnp.float32)) * scale
+                q_pos = i * bq + jnp.arange(bq)
+                cm = tb_idx[None, :] <= q_pos[:, None]
+                sb = jnp.where(cm[None, None, None], sb, -1e30)
+                pb = jax.nn.softmax(sb, axis=-1)
+                return jnp.einsum("bkgqt,btkd->bqkgd", pb,
+                                  vb.astype(jnp.float32)).astype(vb.dtype)
+
+            if hi - lo == 1:
+                outs.append(bucket_block(lo, qg[lo])[None])
+            else:
+                _, ob = jax.lax.scan(
+                    lambda c, args: (c, bucket_block(args[0], args[1])),
+                    None, (jnp.arange(lo, hi), qg[lo:hi]),
+                    unroll=_unroll(hi - lo))
+                outs.append(ob)
+        out = jnp.concatenate(outs, axis=0)
+    else:
+        _, out = jax.lax.scan(
+            lambda c, args: (c, one_block(args[0], args[1])),
+            None, (jnp.arange(n_blocks), qg), unroll=_unroll(n_blocks))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, n_blocks * bq, Hk, G, dv)
+    out = out[:, :S].reshape(B, S, H, dv)
+    return out.astype(q.dtype)  # block outputs already in compute dtype
+
+
+def _skip_block(qi, k, v, row0, bq, scale):
+    """One q block against the causally-reachable k/v prefix only."""
+    Tl = k.shape[1]
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qi.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    cmask = jnp.arange(Tl)[None, :] <= (row0 + jnp.arange(bq))[:, None]
+    s = jnp.where(cmask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32)).astype(v.dtype)
+
+
+def decode_attention(q, k, v, pos):
+    """Single-position attention against a full cache. q: (B,1,H,dh), pos: (B,)"""
+    return chunked_attention(q, k, v, causal=False, kv_len=pos + 1, block_q=1)
+
+
+def init_gqa(rng, d_model, n_heads, n_kv, head_dim, bias=False, std=0.02):
+    ks = split_tree(rng, 4)
+    p = {
+        "wq": normal_init(ks[0], (d_model, n_heads * head_dim), std),
+        "wk": normal_init(ks[1], (d_model, n_kv * head_dim), std),
+        "wv": normal_init(ks[2], (d_model, n_kv * head_dim), std),
+        "wo": normal_init(ks[3], (n_heads * head_dim, d_model), std),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,))
+        p["bk"] = jnp.zeros((n_kv * head_dim,))
+        p["bv"] = jnp.zeros((n_kv * head_dim,))
+    return p
+
+
+def gqa_logical(bias=False):
+    p = {
+        "wq": ("embed", "heads"), "wk": ("embed", "heads"), "wv": ("embed", "heads"),
+        "wo": ("heads", "embed"),
+    }
+    if bias:
+        p.update({"bq": ("heads",), "bk": ("heads",), "bv": ("heads",)})
+    return p
+
+
+def gqa_project(p, x, n_heads, n_kv, head_dim, dtype):
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(dtype)
+    k = x @ p["wk"].astype(dtype)
+    v = x @ p["wv"].astype(dtype)
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dtype), k + p["bk"].astype(dtype), v + p["bv"].astype(dtype)
+    q = constrain(q.reshape(B, S, n_heads, head_dim), "batch", "seq", "heads", None)
+    # k/v head layouts are left to GSPMD propagation: with Hk < model-axis size an
+    # explicit kv_heads constraint forces padded 16-way sharding and involuntary
+    # full rematerialization in the backward pass (measured: +30GB temp).
+    k = k.reshape(B, S, n_kv, head_dim)
+    v = v.reshape(B, S, n_kv, head_dim)
+    return q, k, v
+
+
+def attention_block(p, x, *, cfg, positions, cache=None, pos=None, causal=True,
+                    q_offset=0):
+    """Self-attention with optional KV cache. Returns (out, new_cache)."""
+    dtype = x.dtype
+    q, k, v = gqa_project(p, x, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        out = chunked_attention(q, k, v, causal=causal, q_offset=q_offset,
+                                block_q=cfg.attn_block_q,
+                                causal_skip=getattr(cfg, "attn_causal_skip", False))
+        new_cache = None
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1) \
+            if k.shape[1] == 1 else _scatter_prefill(cache["k"], k)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1) \
+            if v.shape[1] == 1 else _scatter_prefill(cache["v"], v)
+        ck = constrain(ck, "batch", "kv_seq", "kv_heads", None)
+        cv = constrain(cv, "batch", "kv_seq", "kv_heads", None)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = jnp.full((x.shape[0],), pos + 1, jnp.int32)
+        out = decode_attention(q, ck.astype(dtype), cv.astype(dtype), kv_len - 1)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"].astype(dtype), new_cache
+
+
+def _scatter_prefill(cache, fresh):
+    return jax.lax.dynamic_update_slice_in_dim(
+        cache, fresh.astype(cache.dtype), 0, axis=1
+    )
+
+
+# ------------------------------------------------------------------------ MLPs
+
+def init_swiglu(rng, d_model, d_ff, std=0.02):
+    ks = split_tree(rng, 3)
+    return {
+        "wi": normal_init(ks[0], (d_model, d_ff), std),
+        "wg": normal_init(ks[1], (d_model, d_ff), std),
+        "wo": normal_init(ks[2], (d_ff, d_model), std),
+    }
+
+
+def swiglu_logical():
+    return {"wi": ("embed", "ff"), "wg": ("embed", "ff"), "wo": ("ff", "embed")}
+
+
+def swiglu(p, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wi"].astype(dt))
+    h = constrain(h, "batch", "seq", "ff")
+    return h @ p["wo"].astype(dt)
+
+
+def init_gelu_mlp(rng, d_model, d_ff, std=0.02):
+    ks = split_tree(rng, 2)
+    return {
+        "wi": normal_init(ks[0], (d_model, d_ff), std),
+        "bi": jnp.zeros((d_ff,)),
+        "wo": normal_init(ks[1], (d_ff, d_model), std),
+        "bo": jnp.zeros((d_model,)),
+    }
+
+
+def gelu_mlp_logical():
+    return {"wi": ("embed", "ff"), "bi": ("ff",), "wo": ("ff", "embed"), "bo": ("embed",)}
+
+
+def gelu_mlp(p, x):
+    dt = x.dtype
+    h = jax.nn.gelu(x @ p["wi"].astype(dt) + p["bi"].astype(dt))
+    h = constrain(h, "batch", "seq", "ff")
+    return h @ p["wo"].astype(dt) + p["bo"].astype(dt)
+
+
+# ----------------------------------------------------------------- vocab layers
+
+def init_embedding(rng, vocab, d_model, std=0.02):
+    return {"table": normal_init(rng, (vocab, d_model), std)}
+
+
+def embedding_logical():
+    return {"table": ("vocab", "embed")}
+
+
+def embed(p, tokens, dtype):
+    out = jnp.take(p["table"].astype(dtype), tokens, axis=0)
+    return constrain(out, "batch", "seq", "act_embed")
+
+
+def _mask_padded_vocab(logits, n_valid):
+    if n_valid is None or n_valid == logits.shape[-1]:
+        return logits
+    bad = jnp.arange(logits.shape[-1]) >= n_valid
+    return jnp.where(bad, jnp.asarray(-1e30, logits.dtype), logits)
+
+
+def unembed(p, x, n_valid=None):
+    logits = x @ p["table"].astype(x.dtype).T
+    return _mask_padded_vocab(constrain(logits, "batch", "seq", "vocab"), n_valid)
+
+
+def init_lm_head(rng, d_model, vocab, std=0.02):
+    return {"w": normal_init(rng, (d_model, vocab), std)}
+
+
+def lm_head_logical():
+    return {"w": ("embed", "vocab")}
+
+
+def lm_head(p, x, n_valid=None):
+    logits = constrain(x @ p["w"].astype(x.dtype), "batch", "seq", "vocab")
+    return _mask_padded_vocab(logits, n_valid)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token NLL; logits fp32 for stability."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def fused_head_cross_entropy(x, w, labels, mask=None, chunk=512, transpose_w=False,
+                             n_valid=None):
+    """LM head + softmax-xent, CHUNKED over the sequence so the full fp32
+    (B, S, V) logits tensor is never materialized (the single biggest training
+    activation: ~4GB/device at 4k x 128k-vocab).  Each chunk's projection+CE is
+    wrapped in jax.checkpoint -> the backward recomputes one chunk at a time.
+
+    x: (B, S, D); w: (D, V) head weight (or (V, D) tied table, transpose_w=True).
+    Returns mean NLL over mask.
+    """
+    B, S, D = x.shape
+    ck = min(chunk, S)
+    n_chunks = (S + ck - 1) // ck
+    pad = n_chunks * ck - S
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    mask = mask.astype(jnp.float32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xc = x.reshape(B, n_chunks, ck, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, ck).transpose(1, 0, 2)
+    mc = mask.reshape(B, n_chunks, ck).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(xi, li, mi):
+        wt = w.astype(xi.dtype)
+        logits = (xi @ wt.T) if transpose_w else (xi @ wt)
+        logits = constrain(logits, "batch", None, "vocab").astype(jnp.float32)
+        logits = _mask_padded_vocab(logits, n_valid)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - ll) * mi)
+
+    def body(carry, inp):
+        return carry + one(*inp), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc, mc),
+                            unroll=_unroll(n_chunks))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# -------------------------------------------------------------- layer-stack scan
+
+def scan_layers(block_fn, stacked_params, x, cache=None, remat=True, policy="full"):
+    """Run x through L stacked layers; threads per-layer cache through the scan.
+
+    block_fn(layer_params, x, layer_cache) -> (x, new_layer_cache)
+    policy: "full" re-materializes everything in the backward (only the per-layer
+    carries survive — the right default for 16GB v5e); "dots" keeps matmul outputs
+    (dots_with_no_batch_dims_saveable) trading HBM for recompute FLOPs.
+    """
+    fn = block_fn
+    if remat:
+        pol = None if policy in (None, "full") else \
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        fn = jax.checkpoint(block_fn, policy=pol)
+
+    def step(h, inp):
+        lp, lc = inp
+        h, nc = fn(lp, h, lc)
+        return h, nc
+
+    n_layers = jax.tree.leaves(stacked_params)[0].shape[0]
+    x, new_cache = jax.lax.scan(step, x, (stacked_params, cache),
+                                unroll=_unroll(n_layers))
+    return x, new_cache
+
+
+def stack_init(layer_init, rng, n_layers, *args, **kw):
+    """vmap a per-layer initializer into stacked (L, ...) params."""
+    return jax.vmap(lambda k: layer_init(k, *args, **kw))(jax.random.split(rng, n_layers))

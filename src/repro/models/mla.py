@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention block (minicpm3-4b; DeepSeek-V2-style MLA).
+
+Train/prefill run the EXPANDED form (latents up-projected to per-head K/V).
+Decode runs the ABSORBED form: the cache stores only the compressed latents
+``c_kv (B,T,kv_lora)`` + shared rope key ``k_r (B,T,rope_dim)``; query up-projections
+are absorbed into the score/value einsums, so decode attention is MQA-like over an
+effective head dim of ``kv_lora + rope_dim``.  This is MLA's deployment-time win —
+the 32k decode cell's cache is ~10x smaller than GQA's — and the dry-run roofline
+shows it (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.causal_lm import BlockDef, register_block
+from repro.models.sharding import constrain
+
+
+def init(rng, cfg: ModelConfig):
+    ks = L.split_tree(rng, 8)
+    H, qk = cfg.n_heads, cfg.nope_dim + cfg.rope_dim
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,)),
+        "attn": {
+            "wdq": L.normal_init(ks[0], (cfg.d_model, cfg.q_lora)),
+            "q_norm": jnp.ones((cfg.q_lora,)),
+            "wuq": L.normal_init(ks[1], (cfg.q_lora, H * qk)),
+            "wdkv": L.normal_init(ks[2], (cfg.d_model, cfg.kv_lora)),
+            "kv_norm": jnp.ones((cfg.kv_lora,)),
+            "wkr": L.normal_init(ks[3], (cfg.d_model, cfg.rope_dim)),
+            "wuk": L.normal_init(ks[4], (cfg.kv_lora, H * cfg.nope_dim)),
+            "wuv": L.normal_init(ks[5], (cfg.kv_lora, H * cfg.v_head_dim)),
+            "wo": L.normal_init(ks[6], (H * cfg.v_head_dim, cfg.d_model)),
+        },
+        "mlp_norm": jnp.ones((cfg.d_model,)),
+        "mlp": L.init_swiglu(ks[7], cfg.d_model, cfg.d_ff),
+    }
+
+
+def logical(cfg: ModelConfig):
+    add_L = lambda t: jax.tree.map(lambda d: (None,) + d, t,
+                                   is_leaf=lambda v: isinstance(v, tuple))
+    return {
+        "attn_norm": (None, "embed"),
+        "attn": add_L({
+            "wdq": ("embed", None), "q_norm": (None,), "wuq": (None, "heads"),
+            "wdkv": ("embed", None), "kv_norm": (None,), "wkr": ("embed", None),
+            "wuk": (None, "heads"), "wuv": (None, "heads"), "wo": ("heads", "embed"),
+        }),
+        "mlp_norm": (None, "embed"),
+        "mlp": add_L(L.swiglu_logical()),
+    }
+
+
+def _project_q(p, x, cfg, dtype, positions):
+    B, S, _ = x.shape
+    H, qk = cfg.n_heads, cfg.nope_dim + cfg.rope_dim
+    cq = L.rms_norm(x @ p["wdq"].astype(dtype), p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wuq"].astype(dtype)).reshape(B, S, H, qk)
+    q = constrain(q, "batch", "seq", "heads", None)
+    q_nope, q_rope = q[..., : cfg.nope_dim], q[..., cfg.nope_dim:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, x, cfg, dtype, positions):
+    ckv = L.rms_norm(x @ p["wdkv"].astype(dtype), p["kv_norm"], cfg.norm_eps)
+    kr = (x @ p["wkr"].astype(dtype))[:, :, None, :]            # (B,S,1,rope)
+    kr = L.apply_rope(kr, positions, cfg.rope_theta)
+    return ckv, kr[:, :, 0, :]
+
+
+def _expanded_attention(p, x, cfg, dtype, positions, q_offset):
+    """Train/prefill path: latents up-projected, standard causal attention."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _project_q(p, x, cfg, dtype, positions)
+    ckv, kr = _latents(p, x, cfg, dtype, positions)
+    k_nope = (ckv @ p["wuk"].astype(dtype)).reshape(B, S, H, cfg.nope_dim)
+    v = (ckv @ p["wuv"].astype(dtype)).reshape(B, S, H, cfg.v_head_dim)
+    k_rope = jnp.broadcast_to(kr[:, :, None, :], (B, S, H, cfg.rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    out = L.chunked_attention(q, k, v, causal=True, q_offset=q_offset,
+                              block_q=cfg.attn_block_q,
+                              causal_skip=cfg.attn_causal_skip)
+    return out.reshape(B, S, H * cfg.v_head_dim) @ p["wo"].astype(dtype)
+
+
+def _absorbed_decode(p, x, cfg, dtype, positions, cache, pos):
+    """Decode path: attention directly against compressed latents."""
+    B, S, _ = x.shape  # S == 1
+    H = cfg.n_heads
+    q_nope, q_rope = _project_q(p, x, cfg, dtype, positions)
+    ckv_new, kr_new = _latents(p, x, cfg, dtype, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1)
+    ckv = constrain(ckv, "batch", "kv_seq", None)
+    kr = constrain(kr, "batch", "kv_seq", None)
+    new_cache = {"ckv": ckv, "kr": kr}
+
+    wuk = p["wuk"].astype(dtype).reshape(cfg.kv_lora, H, cfg.nope_dim)
+    wuv = p["wuv"].astype(dtype).reshape(cfg.kv_lora, H, cfg.v_head_dim)
+    q_c = jnp.einsum("bqhn,chn->bqhc", q_nope, wuk)             # absorb W_uk
+    scale = 1.0 / np.sqrt(cfg.nope_dim + cfg.rope_dim)
+    s = (jnp.einsum("bqhc,btc->bhqt", q_c.astype(jnp.float32), ckv.astype(jnp.float32))
+         + jnp.einsum("bqhr,btr->bhqt", q_rope.astype(jnp.float32), kr.astype(jnp.float32))) * scale
+    t_idx = jnp.arange(ckv.shape[1])
+    s = jnp.where((t_idx <= pos)[None, None, None, :], s, -1e30)
+    prob = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhqt,btc->bqhc", prob, ckv.astype(jnp.float32))
+    out = jnp.einsum("bqhc,chv->bqhv", ctx_c, wuv.astype(jnp.float32)).astype(dtype)
+    return out.reshape(B, S, H * cfg.v_head_dim) @ p["wo"].astype(dtype), new_cache
+
+
+def apply(cfg: ModelConfig, lp, x, lc, ctx):
+    dtype = x.dtype
+    h = L.rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    if lc is None:
+        attn_out = _expanded_attention(lp["attn"], h, cfg, dtype, ctx["positions"], ctx["q_offset"])
+        new_cache = None
+    else:
+        attn_out, new_cache = _absorbed_decode(lp["attn"], h, cfg, dtype, ctx["positions"], lc, ctx["pos"])
+    x = x + attn_out
+    h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + L.swiglu(lp["mlp"], h)
+    return x, new_cache
+
+
+def init_cache(cfg: ModelConfig, B, T, dtype):
+    return {
+        "ckv": jnp.zeros((B, T, cfg.kv_lora), dtype),
+        "kr": jnp.zeros((B, T, cfg.rope_dim), dtype),
+    }
+
+
+def cache_logical(cfg: ModelConfig):
+    return {"ckv": ("batch", "kv_seq", None), "kr": ("batch", "kv_seq", None)}
+
+
+register_block("mla", BlockDef(init=init, logical=logical, apply=apply,
+                               init_cache=init_cache, cache_logical=cache_logical))

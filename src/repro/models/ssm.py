@@ -1,0 +1,373 @@
+"""State-space / linear-attention blocks: Mamba2 (SSD), Zamba2 hybrid, RWKV6.
+
+These are the sub-quadratic families that run the ``long_500k`` cell.  Training
+uses CHUNKED scans (quadratic only within a chunk, linear across chunks — the SSD
+formulation), decode is an O(1) recurrent state update.  On TPU this is the natural
+adaptation of the papers' CUDA scan kernels: the chunk-local einsums feed the MXU and
+the cross-chunk recurrence is a ``lax.scan`` over chunk states (sequence-parallel
+state passing across data shards is the XPINN time-interface analogue, see DESIGN.md
+§5).
+
+Mamba2 (SSD), per head h with scalar decay a_t = exp(dt_t * A):
+    state_t = a_t * state_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t^T state_t
+RWKV6 ("Finch"), per head, data-dependent per-channel decay w_t:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ;  y_t = r_t (S_t + (u-1) k_t^T v_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.causal_lm import BlockDef, register_block
+from repro.models.sharding import constrain
+
+
+# ================================================================== Mamba2 (SSD)
+
+def _ssd_chunked(x, dt, A, Bm, Cm, state0, chunk):
+    """Chunked SSD scan.
+
+    x: (B, T, H, P)    per-head inputs      (P = ssm_head_dim)
+    dt: (B, T, H)      positive step sizes
+    A: (H,)            negative per-head decay rate
+    Bm, Cm: (B, T, N)  shared input/output projections (N = ssm_state)
+    state0: (B, H, P, N)
+    returns y (B, T, H, P), state_T
+    """
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = T // chunk
+    assert nc * chunk == T, f"T={T} % chunk={chunk} != 0"
+    c = chunk
+
+    xl = x.reshape(Bsz, nc, c, H, P)
+    dtl = dt.reshape(Bsz, nc, c, H)
+    Bl = Bm.reshape(Bsz, nc, c, N)
+    Cl = Cm.reshape(Bsz, nc, c, N)
+
+    dA = dtl * A[None, None, None, :]                 # (B,nc,c,H) negative
+    seg = jnp.cumsum(dA, axis=2)                      # within-chunk cumulative log-decay
+
+    # ---- intra-chunk (quadratic within chunk, masked decay kernel) ----------
+    # L[i,j] = exp(seg_i - seg_j) for i >= j
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]          # (B,nc,c,c,H)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    Ldec = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    G = jnp.einsum("bnik,bnjk->bnij", Cl, Bl)                      # (B,nc,c,c)
+    M = G[..., None] * Ldec                                        # (B,nc,c,c,H)
+    xdt = xl * dtl[..., None]                                      # (B,nc,c,H,P)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", M, xdt)
+
+    # ---- chunk states + inter-chunk scan ------------------------------------
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)                # (B,nc,c,H)
+    S_chunk = jnp.einsum("bnch,bnchp,bnck->bnhpk", decay_to_end * dtl, xl, Bl)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])                        # (B,nc,H)
+
+    def scan_fn(s, inp):
+        s_c, dec = inp                                             # (B,H,P,N), (B,H)
+        s_new = s * dec[:, :, None, None] + s_c
+        return s_new, s                                            # emit state ENTERING chunk
+
+    stateT, states_in = jax.lax.scan(
+        scan_fn, state0,
+        (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    states_in = states_in.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,P,N)
+
+    # ---- contribution of carried-in state -----------------------------------
+    decay_from_start = jnp.exp(seg)                                # (B,nc,c,H)
+    y_inter = jnp.einsum("bnck,bnhpk,bnch->bnchp", Cl, states_in, decay_from_start)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, stateT
+
+
+def _ssd_step(x, dt, A, Bm, Cm, state):
+    """Single-token recurrence. x:(B,H,P) dt:(B,H) Bm/Cm:(B,N) state:(B,H,P,N)."""
+    dA = jnp.exp(dt * A[None, :])                                   # (B,H)
+    upd = jnp.einsum("bhp,bk->bhpk", x * dt[..., None], Bm)
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpk,bk->bhp", state, Cm)
+    return y, state
+
+
+def mamba2_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    ks = L.split_tree(rng, 6)
+    return {
+        "norm": jnp.ones((d,)),
+        "in_proj": L.normal_init(ks[0], (d, 2 * d_in + 2 * N + H)),  # x, z, B, C, dt
+        "conv_w": L.normal_init(ks[1], (cfg.ssm_conv, d_in + 2 * N), std=0.2),
+        "A_log": jnp.zeros((H,)),          # A = -exp(A_log) -> A = -1 at init
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.zeros((H,)),
+        "out_norm": jnp.ones((d_in,)),
+        "out_proj": L.normal_init(ks[2], (d_in, d)),
+    }
+
+
+def mamba2_logical(cfg: ModelConfig):
+    return {
+        "norm": (None, "embed"),
+        "in_proj": (None, "embed", "ff"),
+        "conv_w": (None, None, "ff"),
+        "A_log": (None, "ff"), "D": (None, "ff"), "dt_bias": (None, "ff"),
+        "out_norm": (None, "ff"),
+        "out_proj": (None, "ff", "embed"),
+    }
+
+
+def _causal_conv(u, w, conv_state=None):
+    """Depthwise causal conv, width K. u: (B,T,C), w: (K,C).
+
+    conv_state: (B, K-1, C) trailing inputs from the previous segment (decode).
+    Returns (out, new_conv_state).
+    """
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)                       # (B, T+K-1, C)
+    out = sum(full[:, i : i + u.shape[1]] * w[i][None, None, :] for i in range(K))
+    new_state = full[:, -(K - 1):] if K > 1 else None
+    return out, new_state
+
+
+def mamba2_apply(cfg: ModelConfig, lp, x, lc, ctx):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    H = d_in // cfg.ssm_head_dim
+    P, N = cfg.ssm_head_dim, cfg.ssm_state
+    dt_f = x.dtype
+    Bsz, T, _ = x.shape
+
+    h = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    proj = h @ lp["in_proj"].astype(dt_f)
+    proj = constrain(proj, "batch", "seq", "ff")
+    xz, z, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xz, Bm, Cm], axis=-1)
+    conv_state = None if lc is None else lc["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, lp["conv_w"].astype(dt_f), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xz, Bm, Cm = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"].astype(jnp.float32))
+    xh = xz.reshape(Bsz, T, H, P).astype(jnp.float32)
+    Bm32, Cm32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    if lc is None:
+        state0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+        y, _ = _ssd_chunked(xh, dt, A, Bm32, Cm32, state0, min(cfg.ssm_chunk, T))
+        new_cache = None
+    else:
+        y1, new_state = _ssd_step(xh[:, 0], dt[:, 0], A, Bm32[:, 0], Cm32[:, 0],
+                                  lc["ssm"].astype(jnp.float32))
+        y = y1[:, None]
+        new_cache = {"ssm": new_state.astype(lc["ssm"].dtype), "conv": new_conv.astype(lc["conv"].dtype)}
+    y = y + xh * lp["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, T, d_in).astype(dt_f)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["out_norm"], cfg.norm_eps)
+    return x + y @ lp["out_proj"].astype(dt_f), new_cache
+
+
+def mamba2_cache(cfg: ModelConfig, B, T, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return {
+        "ssm": jnp.zeros((B, H, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, d_in + 2 * cfg.ssm_state), dtype),
+    }
+
+
+def mamba2_cache_logical(cfg: ModelConfig):
+    return {"ssm": ("batch", "ff", None, None), "conv": ("batch", None, "ff")}
+
+
+register_block("ssm", BlockDef(init=mamba2_init, logical=mamba2_logical,
+                               apply=mamba2_apply, init_cache=mamba2_cache,
+                               cache_logical=mamba2_cache_logical))
+
+
+# ===================================================================== RWKV6
+
+def rwkv6_init(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = L.split_tree(rng, 8)
+    return {
+        "tm_norm": jnp.ones((d,)),
+        "tm": {
+            "mu_r": jnp.full((d,), 0.5), "mu_k": jnp.full((d,), 0.5),
+            "mu_v": jnp.full((d,), 0.5), "mu_w": jnp.full((d,), 0.5),
+            "mu_g": jnp.full((d,), 0.5),
+            "wr": L.normal_init(ks[0], (d, d)), "wk": L.normal_init(ks[1], (d, d)),
+            "wv": L.normal_init(ks[2], (d, d)), "wg": L.normal_init(ks[3], (d, d)),
+            "w_decay": L.normal_init(ks[4], (d, d), std=0.01),   # data-dependent decay
+            "decay_bias": jnp.full((d,), -6.0),
+            "u_bonus": jnp.zeros((d,)),
+            "wo": L.normal_init(ks[5], (d, d)),
+            "ln_w": jnp.ones((d,)),
+        },
+        "cm_norm": jnp.ones((d,)),
+        "cm": {
+            "mu_k": jnp.full((d,), 0.5),
+            "wk": L.normal_init(ks[6], (d, cfg.d_ff)),
+            "wv": L.normal_init(ks[7], (cfg.d_ff, d)),
+        },
+    }
+
+
+def rwkv6_logical(cfg: ModelConfig):
+    dd = (None, "embed", "heads")
+    return {
+        "tm_norm": (None, "embed"),
+        "tm": {
+            "mu_r": (None, "embed"), "mu_k": (None, "embed"), "mu_v": (None, "embed"),
+            "mu_w": (None, "embed"), "mu_g": (None, "embed"),
+            "wr": dd, "wk": dd, "wv": dd, "wg": dd, "w_decay": dd,
+            "decay_bias": (None, "heads"), "u_bonus": (None, "heads"),
+            "wo": (None, "heads", "embed"), "ln_w": (None, "embed"),
+        },
+        "cm_norm": (None, "embed"),
+        "cm": {"mu_k": (None, "embed"), "wk": (None, "embed", "ff"), "wv": (None, "ff", "embed")},
+    }
+
+
+def _token_shift(x, mu, last):
+    """lerp between current token and previous token. last: (B,1,d) or None."""
+    prev = jnp.concatenate([jnp.zeros_like(x[:, :1]) if last is None else last.astype(x.dtype),
+                            x[:, :-1]], axis=1)
+    return x + (prev - x) * mu.astype(x.dtype)
+
+
+def _wkv6_chunked(r, k, v, w, u, state0, chunk):
+    """Chunked WKV6. r/k/v: (B,T,H,P); w: per-step decay in (0,1) (B,T,H,P);
+    u: (H,P) bonus; state0: (B,H,P,P) keyed [key_dim, value_dim]."""
+    B, T, H, P = r.shape
+    nc = T // chunk
+    c = chunk
+    rl, kl, vl, wl = (a.reshape(B, nc, c, H, P) for a in (r, k, v, w))
+    logw = jnp.log(wl + 1e-38)
+    seg = jnp.cumsum(logw, axis=2)                                 # (B,nc,c,H,P)
+
+    # intra-chunk: y_i reads the state BEFORE step-i decay applies, so the decay of
+    # kv_j at step i is prod_{m=j+1}^{i-1} w_m = exp((seg_i - logw_i) - seg_j), j < i
+    esc = seg - logw                                               # exclusive cumsum
+    diff = esc[:, :, :, None] - seg[:, :, None, :]                 # (B,nc,c,c,H,P)
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    dec = jnp.where(mask[None, None, :, :, None, None], jnp.exp(diff), 0.0)
+    a = jnp.einsum("bnihp,bnijhp,bnjhp->bnijh", rl, dec, kl)
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", a, vl)
+    bonus = jnp.einsum("bnchp,hp,bnchp->bnch", rl, u, kl)
+    y_intra = y_intra + bonus[..., None] * vl
+
+    # chunk summary: S_chunk = sum_j decay(j->end) k_j v_j^T
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)                # (B,nc,c,H,P)
+    S_chunk = jnp.einsum("bnchp,bnchq->bnhpq", kl * decay_to_end, vl)
+    chunk_decay = jnp.exp(seg[:, :, -1])                           # (B,nc,H,P)
+
+    def scan_fn(s, inp):
+        s_c, dec_c = inp
+        return s * dec_c[..., None] + s_c, s
+
+    stateT, states_in = jax.lax.scan(
+        scan_fn, state0, (S_chunk.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2, 3))
+    )
+    states_in = states_in.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,P,P)
+    decay_from_start = jnp.exp(seg - logw)                         # decay BEFORE applying step i
+    y_inter = jnp.einsum("bnchp,bnhpq->bnchq", rl * decay_from_start, states_in)
+    y = (y_intra + y_inter).reshape(B, T, H, P)
+    return y, stateT
+
+
+def _wkv6_step(r, k, v, w, u, state):
+    """r/k/v/w: (B,H,P); state: (B,H,P,P)."""
+    kv = jnp.einsum("bhp,bhq->bhpq", k, v)
+    y = jnp.einsum("bhp,bhpq->bhq", r, state + u[None, :, :, None] * kv)
+    state = state * w[..., None] + kv
+    return y, state
+
+
+def rwkv6_apply(cfg: ModelConfig, lp, x, lc, ctx):
+    d = cfg.d_model
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    P = d // H
+    dt_f = x.dtype
+    Bsz, T, _ = x.shape
+    decode = lc is not None
+
+    # ---- time mix -----------------------------------------------------------
+    tm_h = L.rms_norm(x, lp["tm_norm"], cfg.norm_eps)
+    tm = lp["tm"]
+    last_x = lc["tm_shift"] if decode else None
+    r = _token_shift(tm_h, tm["mu_r"], last_x) @ tm["wr"].astype(dt_f)
+    k = _token_shift(tm_h, tm["mu_k"], last_x) @ tm["wk"].astype(dt_f)
+    v = _token_shift(tm_h, tm["mu_v"], last_x) @ tm["wv"].astype(dt_f)
+    g = _token_shift(tm_h, tm["mu_g"], last_x) @ tm["wg"].astype(dt_f)
+    dw = _token_shift(tm_h, tm["mu_w"], last_x) @ tm["w_decay"].astype(dt_f)
+    # data-dependent decay in (0,1):  w = exp(-exp(bias + dw))
+    w = jnp.exp(-jnp.exp(tm["decay_bias"].astype(jnp.float32) + dw.astype(jnp.float32)))
+
+    shp = (Bsz, T, H, P)
+    r4, k4, v4, w4 = (a.astype(jnp.float32).reshape(shp) for a in (r, k, v, w))
+    u4 = tm["u_bonus"].astype(jnp.float32).reshape(H, P)
+
+    if not decode:
+        state0 = jnp.zeros((Bsz, H, P, P), jnp.float32)
+        y, _ = _wkv6_chunked(r4, k4, v4, w4, u4, state0, min(cfg.ssm_chunk, T))
+        new_cache = None
+    else:
+        y1, new_state = _wkv6_step(r4[:, 0], k4[:, 0], v4[:, 0], w4[:, 0], u4,
+                                   lc["wkv"].astype(jnp.float32))
+        y = y1[:, None]
+    y = y.reshape(Bsz, T, d).astype(dt_f)
+    y = L.rms_norm(y, tm["ln_w"], cfg.norm_eps) * jax.nn.silu(g)
+    x = x + y @ tm["wo"].astype(dt_f)
+
+    # ---- channel mix ----------------------------------------------------------
+    cm_h = L.rms_norm(x, lp["cm_norm"], cfg.norm_eps)
+    cm = lp["cm"]
+    last_c = lc["cm_shift"] if decode else None
+    kc = _token_shift(cm_h, cm["mu_k"], last_c) @ cm["wk"].astype(dt_f)
+    kc = constrain(kc, "batch", "seq", "ff")
+    x = x + (jnp.square(jax.nn.relu(kc)) @ cm["wv"].astype(dt_f))
+
+    if decode:
+        new_cache = {
+            "wkv": new_state.astype(lc["wkv"].dtype),
+            "tm_shift": tm_h[:, -1:],   # next step's token-shift inputs
+            "cm_shift": cm_h[:, -1:],
+        }
+        return x, new_cache
+    return x, None
+
+
+def rwkv6_cache(cfg: ModelConfig, B, T, dtype):
+    d = cfg.d_model
+    H = cfg.n_heads if cfg.n_heads else d // 64
+    P = d // H
+    return {
+        "wkv": jnp.zeros((B, H, P, P), jnp.float32),
+        "tm_shift": jnp.zeros((B, 1, d), dtype),
+        "cm_shift": jnp.zeros((B, 1, d), dtype),
+    }
+
+
+def rwkv6_cache_logical(cfg: ModelConfig):
+    # 40 heads don't divide the 16-way model axis; the recurrent state is tiny
+    # (no sequence dim — RWKV's long-context selling point), so batch-shard only.
+    return {"wkv": ("batch", None, None, None),
+            "tm_shift": ("batch", None, "act_embed"), "cm_shift": ("batch", None, "act_embed")}
+
+
+register_block("rwkv", BlockDef(init=rwkv6_init, logical=rwkv6_logical,
+                                apply=rwkv6_apply, init_cache=rwkv6_cache,
+                                cache_logical=rwkv6_cache_logical))

@@ -1,0 +1,152 @@
+"""Zamba2 hybrid backbone: Mamba2 stacks with ONE SHARED attention block applied
+every ``attn_every`` layers (zamba2-1.2b: 38 Mamba2 blocks, shared attn every 6).
+
+The layer stack is therefore staged: ``n_stages = n_layers // attn_every`` scanned
+Mamba2 groups, a shared-parameter attention block after each, and a scanned tail of
+``n_layers % attn_every`` Mamba2 blocks.  Each shared-attn APPLICATION has its own
+KV cache slot (same weights, different keys/values — that is Zamba's trick for
+attention quality at SSM cost).  Sub-quadratic overall -> runs ``long_500k`` with
+the cache sequence dim sharded over ``data`` (DESIGN.md §5's XPINN time-interface
+analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import dense as dense_mod
+from repro.models import layers as L
+from repro.models import ssm as ssm_mod
+from repro.models.causal_lm import CausalLM, _dtype
+from repro.models.sharding import constrain, specs_from_logical
+
+
+class Zamba2Model(CausalLM):
+    def __init__(self, cfg: ModelConfig):
+        # bypass CausalLM.__init__ block lookup; we compose blocks manually
+        self.cfg = cfg
+        self.block = None
+        self.prelude = None
+        self.n_stages = cfg.n_layers // cfg.attn_every
+        self.tail = cfg.n_layers % cfg.attn_every
+
+    # ------------------------------------------------------------------ params
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        ks = L.split_tree(rng, 5)
+        return {
+            "embed": L.init_embedding(ks[0], cfg.padded_vocab, cfg.d_model),
+            "mamba": L.stack_init(lambda k: ssm_mod.mamba2_init(k, cfg), ks[1], cfg.n_layers),
+            "shared_attn": dense_mod.init(ks[2], cfg),
+            "final_norm": jnp.ones((cfg.d_model,)),
+            "head": L.init_lm_head(ks[3], cfg.d_model, cfg.padded_vocab),
+        }
+
+    def logical(self) -> dict:
+        cfg = self.cfg
+        strip_L = lambda t: jax.tree.map(lambda d: d[1:], t,
+                                         is_leaf=lambda v: isinstance(v, tuple))
+        return {
+            "embed": L.embedding_logical(),
+            "mamba": ssm_mod.mamba2_logical(cfg),
+            "shared_attn": strip_L(dense_mod.logical(cfg)),
+            "final_norm": ("embed",),
+            "head": L.lm_head_logical(),
+        }
+
+    def param_specs(self, rules):
+        return specs_from_logical(self.logical(), rules)
+
+    # ------------------------------------------------------------------- cache
+    def _cache(self, B, T, as_struct):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        mam = jax.eval_shape(lambda: ssm_mod.mamba2_cache(cfg, B, T, dt))
+        att = jax.eval_shape(lambda: dense_mod.init_cache(cfg, B, T, dt))
+        mk = (lambda s, n: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype)) if as_struct \
+            else (lambda s, n: jnp.zeros((n,) + s.shape, s.dtype))
+        return {
+            "mamba": jax.tree.map(lambda s: mk(s, cfg.n_layers), mam),
+            "attn": jax.tree.map(lambda s: mk(s, self.n_stages), att),
+        }
+
+    def init_cache(self, batch_size, seq_len):
+        return self._cache(batch_size, seq_len, as_struct=False)
+
+    def cache_struct(self, batch_size, seq_len):
+        return self._cache(batch_size, seq_len, as_struct=True)
+
+    def cache_specs(self, rules):
+        add_L = lambda t: jax.tree.map(lambda d: (None,) + d, t,
+                                       is_leaf=lambda v: isinstance(v, tuple))
+        return {
+            "mamba": specs_from_logical(add_L(ssm_mod.mamba2_cache_logical(self.cfg)), rules),
+            "attn": specs_from_logical(add_L(dense_mod.cache_logical(self.cfg)), rules),
+        }
+
+    # ----------------------------------------------------------------- forward
+    def loss(self, params, batch):
+        x, _ = self._hidden_zamba(params, batch)
+        return L.fused_head_cross_entropy(
+            x, params["head"]["w"], batch["labels"], batch.get("loss_mask"),
+            n_valid=self.cfg.vocab if self.cfg.padded_vocab != self.cfg.vocab else None)
+
+    def forward(self, params, batch, cache=None, pos=None):
+        x, nc = self._hidden_zamba(params, batch, cache, pos)
+        nv = self.cfg.vocab if self.cfg.padded_vocab != self.cfg.vocab else None
+        return L.lm_head(params["head"], x, nv), nc
+
+    def _hidden_zamba(self, params, batch, cache=None, pos=None):
+        cfg = self.cfg
+        dtype = _dtype(cfg)
+        x = L.embed(params["embed"], batch["tokens"], dtype)
+        B, S = x.shape[:2]
+        if pos is None:
+            positions = jnp.arange(S)[None, :]
+        else:
+            positions = jnp.full((B, 1), pos, jnp.int32)
+        ctx = dict(positions=positions, pos=pos, q_offset=0,
+                   mode="decode" if pos is not None else "full")
+
+        def mamba_fn(lp, h, lc):
+            return ssm_mod.mamba2_apply(cfg, lp, h, lc, ctx)
+
+        take = lambda t, a, b: jax.tree.map(lambda v: v[a:b], t)
+        new_mamba, new_attn = [], []
+        e = cfg.attn_every
+        for s in range(self.n_stages):
+            mc = None if cache is None else take(cache["mamba"], s * e, (s + 1) * e)
+            x, nm = L.scan_layers(mamba_fn, take(params["mamba"], s * e, (s + 1) * e),
+                                  x, mc, remat=cfg.remat, policy=cfg.remat_policy)
+            if cache is not None:
+                new_mamba.append(nm)
+            ac = None if cache is None else jax.tree.map(lambda v: v[s], cache["attn"])
+            h = L.rms_norm(x, params["shared_attn"]["attn_norm"], cfg.norm_eps)
+            attn_out, na = L.attention_block(
+                params["shared_attn"]["attn"], h, cfg=cfg, positions=positions,
+                cache=ac, pos=pos, causal=True,
+            )
+            x = x + attn_out
+            h = L.rms_norm(x, params["shared_attn"]["mlp_norm"], cfg.norm_eps)
+            x = x + L.swiglu(params["shared_attn"]["mlp"], h)
+            if cache is not None:
+                new_attn.append(na)
+        if self.tail:
+            a = self.n_stages * e
+            mc = None if cache is None else take(cache["mamba"], a, a + self.tail)
+            x, nm = L.scan_layers(mamba_fn, take(params["mamba"], a, a + self.tail),
+                                  x, mc, remat=cfg.remat, policy=cfg.remat_policy)
+            if cache is not None:
+                new_mamba.append(nm)
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cache is None:
+            return x, None
+        new_cache = {
+            "mamba": jax.tree.map(lambda *vs: jnp.concatenate(vs, axis=0), *new_mamba),
+            "attn": jax.tree.map(lambda *vs: jnp.stack(vs, axis=0), *new_attn),
+        }
+        return x, new_cache

@@ -1,0 +1,3 @@
+from repro.optim.adam import AdamConfig, adam_update, clip_by_global_norm, init_adam, warmup_cosine
+from repro.optim.compress import CompressionConfig, compress_decompress, wire_bytes
+from repro.optim.lbfgs import LBFGSConfig, init_lbfgs, lbfgs_refine, lbfgs_step

@@ -1,0 +1,74 @@
+"""Adam / AdamW from scratch (paper §6 uses Adam per subdomain).
+
+Supports the paper's per-subdomain learning rates: ``lr`` may be a scalar OR an array
+broadcast against each leaf's LEADING axis (the stacked ``n_sub`` axis in the
+reference trainer).  Inside ``shard_map`` each device passes its own scalar lr.
+
+Also provides a simple warmup-cosine schedule (used by the LM training driver) and
+gradient clipping by global norm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0  # decoupled (AdamW) when > 0
+
+
+def init_adam(params: Pytree) -> dict:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params), "count": jnp.zeros((), jnp.int32)}
+
+
+def _bcast_lr(lr, leaf):
+    """Broadcast scalar/per-subdomain lr against a leaf."""
+    lr = jnp.asarray(lr, leaf.dtype)
+    if lr.ndim == 0:
+        return lr
+    return lr.reshape(lr.shape + (1,) * (leaf.ndim - lr.ndim))
+
+
+def adam_update(
+    grads: Pytree, state: dict, params: Pytree, lr, cfg: AdamConfig = AdamConfig()
+) -> tuple[Pytree, dict]:
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1**c
+    bc2 = 1.0 - cfg.b2**c
+
+    m = jax.tree.map(lambda mu, g: cfg.b1 * mu + (1 - cfg.b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda nu, g: cfg.b2 * nu + (1 - cfg.b2) * g * g, state["v"], grads)
+
+    def upd(p, mu, nu):
+        step = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p
+        return p - _bcast_lr(lr, p) * step
+
+    new_params = jax.tree.map(upd, params, m, v)
+    return new_params, {"m": m, "v": v, "count": count}
+
+
+def clip_by_global_norm(grads: Pytree, max_norm: float) -> tuple[Pytree, jax.Array]:
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def warmup_cosine(step: jax.Array, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)

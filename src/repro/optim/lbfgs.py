@@ -1,0 +1,152 @@
+"""Memory-limited BFGS (paper §6: the Sandblaster distributed L-BFGS reference).
+
+Standard PINN practice (and the paper's own lineage, Raissi et al.) is Adam for the
+bulk of training then L-BFGS for refinement: the PINN loss landscape rewards a
+curvature-aware final descent.  This implementation is jit-friendly:
+
+* fixed-size history (m pairs) carried as stacked arrays — no python-side state;
+* the classic two-loop recursion runs as ``lax.fori_loop``s over the history;
+* backtracking Armijo line search with a bounded number of probes (``lax.while_loop``
+  is avoided so the step stays a fixed-shape XLA program — probes are vectorized and
+  the first acceptable step is selected).
+
+Per-subdomain use: the paper optimizes each subdomain's loss independently, so the
+distributed trainer can vmap/shard_map this update exactly like Adam (curvature
+pairs live per subdomain).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class LBFGSConfig:
+    history: int = 10
+    max_step: float = 1.0
+    armijo_c1: float = 1e-4
+    n_probes: int = 14         # backtracking ladder: max_step * 0.5**j
+    eps: float = 1e-10
+
+
+def _flatten(tree: Pytree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes = [l.shape for l in leaves]
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves]) if leaves else jnp.zeros((0,))
+    def unflatten(v):
+        out, ofs = [], 0
+        for sh, sz in zip(shapes, sizes):
+            out.append(v[ofs:ofs + sz].reshape(sh))
+            ofs += sz
+        return jax.tree_util.tree_unflatten(treedef, out)
+    return flat, unflatten
+
+
+def init_lbfgs(params: Pytree, cfg: LBFGSConfig = LBFGSConfig()) -> dict:
+    flat, _ = _flatten(params)
+    n = flat.shape[0]
+    return {
+        "s": jnp.zeros((cfg.history, n)),   # param deltas
+        "y": jnp.zeros((cfg.history, n)),   # grad deltas
+        "rho": jnp.zeros((cfg.history,)),
+        "count": jnp.zeros((), jnp.int32),
+        "prev_flat": flat,
+        "prev_grad": jnp.zeros_like(flat),
+    }
+
+
+def _two_loop(g, s, y, rho, count, m, eps):
+    """Standard L-BFGS two-loop recursion over a circular history buffer."""
+    idxs = (count - 1 - jnp.arange(m)) % m          # newest -> oldest
+    valid = jnp.arange(m) < jnp.minimum(count, m)
+
+    def bwd(i, carry):
+        q, alphas = carry
+        j = idxs[i]
+        a = jnp.where(valid[i], rho[j] * jnp.dot(s[j], q), 0.0)
+        q = q - a * y[j] * valid[i]
+        return q, alphas.at[i].set(a)
+
+    q, alphas = jax.lax.fori_loop(0, m, bwd, (g, jnp.zeros((m,))))
+
+    # initial Hessian scaling: gamma = s.y/y.y of the newest pair; before any
+    # curvature pair exists, 1/|g| (unit-norm first direction so the Armijo
+    # ladder's largest probe is a max_step-length move, not |g|*max_step)
+    jn = (count - 1) % m
+    yy = jnp.dot(y[jn], y[jn])
+    g_norm = jnp.sqrt(jnp.dot(q, q))
+    gamma = jnp.where(count > 0, jnp.dot(s[jn], y[jn]) / (yy + eps),
+                      1.0 / (g_norm + eps))
+    r = gamma * q
+
+    def fwd(i, r):
+        ii = m - 1 - i                              # oldest -> newest
+        j = idxs[ii]
+        b = jnp.where(valid[ii], rho[j] * jnp.dot(y[j], r), 0.0)
+        return r + (alphas[ii] - b) * s[j] * valid[ii]
+
+    return jax.lax.fori_loop(0, m, fwd, r)
+
+
+def lbfgs_step(loss_fn: Callable, params: Pytree, state: dict,
+               cfg: LBFGSConfig = LBFGSConfig()):
+    """One L-BFGS iteration. loss_fn: params -> scalar. Returns (params, state, loss)."""
+    flat, unflatten = _flatten(params)
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    g, _ = _flatten(grads)
+    m = cfg.history
+
+    d = -_two_loop(g, state["s"], state["y"], state["rho"], state["count"], m, cfg.eps)
+    # safeguard: fall back to steepest descent on a non-descent direction
+    descent = jnp.dot(d, g)
+    g_norm = jnp.sqrt(jnp.dot(g, g)) + cfg.eps
+    d = jnp.where(descent < 0, d, -g / g_norm)
+    descent = jnp.where(descent < 0, descent, -g_norm)
+
+    # vectorized backtracking Armijo search over a fixed ladder of step sizes
+    steps = cfg.max_step * 0.5 ** jnp.arange(cfg.n_probes)
+    cand = flat[None, :] + steps[:, None] * d[None, :]
+    losses = jax.vmap(lambda v: loss_fn(unflatten(v)))(cand)
+    ok = losses <= loss + cfg.armijo_c1 * steps * descent
+    # first acceptable probe; if none, REJECT the step (monotone by construction;
+    # the curvature pair degenerates to zero and is skipped below)
+    first = jnp.argmax(ok)
+    t = jnp.where(jnp.any(ok), steps[first], 0.0)
+    new_flat = flat + t * d
+    new_loss = jnp.where(jnp.any(ok), losses[first], loss)
+
+    new_params = unflatten(new_flat)
+    new_g, _ = _flatten(jax.grad(loss_fn)(new_params))
+    s_vec, y_vec = new_flat - flat, new_g - g
+    sy = jnp.dot(s_vec, y_vec)
+    slot = state["count"] % m
+    keep = sy > cfg.eps                              # curvature condition
+    new_state = {
+        "s": jnp.where(keep, state["s"].at[slot].set(s_vec), state["s"]),
+        "y": jnp.where(keep, state["y"].at[slot].set(y_vec), state["y"]),
+        "rho": jnp.where(keep, state["rho"].at[slot].set(1.0 / (sy + cfg.eps)),
+                         state["rho"]),
+        "count": state["count"] + keep.astype(jnp.int32),
+        "prev_flat": new_flat,
+        "prev_grad": new_g,
+    }
+    return new_params, new_state, new_loss
+
+
+def lbfgs_refine(loss_fn: Callable, params: Pytree, steps: int,
+                 cfg: LBFGSConfig = LBFGSConfig()):
+    """Run `steps` jitted L-BFGS iterations (the PINN refinement phase)."""
+    state = init_lbfgs(params, cfg)
+    step = jax.jit(partial(lbfgs_step, loss_fn, cfg=cfg))
+    losses = []
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+        losses.append(float(loss))
+    return params, losses

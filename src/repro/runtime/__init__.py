@@ -1,0 +1,2 @@
+from repro.runtime.elastic import balanced_counts, remap_params
+from repro.runtime.failures import InjectedFailure, run_with_failures

@@ -1,0 +1,47 @@
+"""Elastic re-decomposition: resume a DD-PINN run on a DIFFERENT worker count.
+
+At 1000+ node scale, restarts rarely come back with the same world size.  The
+paper's decomposition is static; we extend it: a checkpoint taken at ``n_old``
+subdomains can seed a restart at ``n_new`` subdomains.  Each NEW subdomain adopts
+the parameters of the OLD subdomain whose centroid is nearest to its own (the
+physics re-synchronizes the interfaces within a few hundred steps — validated in
+``tests/test_elastic.py``).  Optimizer moments restart from zero (standard after a
+topology change); the Adam step count is preserved via metadata.
+
+Also provides straggler-aware re-balancing of residual point counts (the paper's
+§7.6 notes subdomain 7's 800 points idling the other 9 workers).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.domain import Decomposition
+from repro.utils import tree_unstack, tree_stack
+import jax
+import jax.numpy as jnp
+
+
+def remap_params(
+    old_params,            # stacked (n_old, ...)
+    old_decomp: Decomposition,
+    new_decomp: Decomposition,
+):
+    """Nearest-centroid parameter adoption across decompositions."""
+    n_old, n_new = old_decomp.n_sub, new_decomp.n_sub
+    old_c = np.stack([old_decomp.centroid(q) for q in range(n_old)])
+    new_c = np.stack([new_decomp.centroid(q) for q in range(n_new)])
+    # nearest old subdomain for every new one
+    d2 = ((new_c[:, None, :] - old_c[None, :, :]) ** 2).sum(-1)
+    src = np.argmin(d2, axis=1)  # (n_new,)
+    return jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[src]), old_params), src
+
+
+def balanced_counts(counts: list[int]) -> list[int]:
+    """Equalize total work across workers, preserving the global point budget."""
+    total = sum(counts)
+    n = len(counts)
+    base = total // n
+    out = [base] * n
+    for i in range(total - base * n):
+        out[i] += 1
+    return out

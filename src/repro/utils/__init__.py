@@ -1,0 +1,72 @@
+"""Small shared utilities: pytree helpers, timing, numerics."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_stack(trees: list[Pytree]) -> Pytree:
+    """Stack a list of identically-structured pytrees along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: Pytree, n: int) -> list[Pytree]:
+    """Inverse of tree_stack."""
+    return [jax.tree.map(lambda x: x[i], tree) for i in range(n)]
+
+
+def tree_bytes(tree: Pytree) -> int:
+    """Total bytes of all array leaves."""
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree.leaves(tree)
+        if hasattr(x, "dtype")
+    )
+
+
+def tree_count(tree: Pytree) -> int:
+    """Total number of scalar parameters."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree) if hasattr(x, "shape"))
+
+
+def tree_allclose(a: Pytree, b: Pytree, rtol: float = 1e-5, atol: float = 1e-6) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(x, y, rtol=rtol, atol=atol) for x, y in zip(la, lb))
+
+
+def tree_finite(tree: Pytree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in jax.tree.leaves(tree))
+
+
+@contextmanager
+def timed(out: dict, key: str) -> Iterator[None]:
+    """Context manager accumulating wall time into out[key]."""
+    t0 = time.perf_counter()
+    yield
+    out[key] = out.get(key, 0.0) + (time.perf_counter() - t0)
+
+
+def block_tree(tree: Pytree) -> Pytree:
+    """block_until_ready on every leaf (for timing)."""
+    return jax.tree.map(lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x, tree)
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-clock seconds per call of a jitted function."""
+    for _ in range(warmup):
+        block_tree(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        block_tree(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

@@ -1,0 +1,123 @@
+"""HLO text analysis: collective-communication byte accounting for the roofline.
+
+``cost_analysis()`` reports FLOPs/bytes but NOT collective traffic, so we parse the
+SPMD-partitioned module text.  For every ``all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute`` op we compute the PER-DEVICE OPERAND bytes, deriving
+the operand size from the printed OUTPUT type signature and the op semantics:
+
+    all-reduce / all-to-all / collective-permute : operand = output
+    all-gather                                   : operand = output / group_size
+    reduce-scatter                               : operand = output * group_size
+
+(group size parsed from ``replica_groups``; ``-start`` counted once, ``-done``
+skipped).  Totals are per-device, matching cost_analysis' per-device convention; the
+spec's total-bytes / (chips x link_bw) equals our per-device bytes / link_bw.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _sig_bytes(sig: str) -> int:
+    """Bytes of one type signature, possibly a tuple '(bf16[2,3], f32[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(1, len(m.group(1).split(",")))
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device operand bytes by collective kind (+ op counts)."""
+    by_kind: dict[str, float] = defaultdict(float)
+    counts: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        out_bytes = _sig_bytes(sig)
+        g = _group_size(line)
+        if kind == "all-gather":
+            # start-op tuple prints (operand, output): take largest as output
+            op_bytes = out_bytes / (1 + 1.0 / g) / g if m.group(3) else out_bytes / g
+        elif kind == "reduce-scatter":
+            op_bytes = out_bytes * g
+        elif kind == "all-reduce" and m.group(3):
+            op_bytes = out_bytes / 2  # start tuple prints (operand, output)
+        else:
+            op_bytes = out_bytes
+        by_kind[kind] += op_bytes
+        counts[kind] += 1
+    return {
+        "bytes_by_kind": dict(by_kind),
+        "counts": dict(counts),
+        "total_bytes": float(sum(by_kind.values())),
+    }
+
+
+def op_histogram(hlo_text: str, top: int = 25) -> list[tuple[str, int]]:
+    """Crude opcode histogram of the entry/partitioned module (dup-spotting)."""
+    ops = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\w+\[[^\]]*\]\S*)\s+([a-z0-9-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return sorted(ops.items(), key=lambda kv: -kv[1])[:top]
+
+
+def top_collectives(hlo_text: str, n: int = 12) -> list[dict]:
+    """Largest individual collective ops with their source metadata (attribution
+    for the §Perf loop: WHICH all-reduce is eating the wire)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        sig, kind = m.group(1), m.group(2)
+        g = _group_size(line)
+        b = _sig_bytes(sig)
+        if kind == "all-gather":
+            b = b / (1 + 1.0 / g) / g if m.group(3) else b / g
+        elif kind == "reduce-scatter":
+            b = b * g
+        elif kind == "all-reduce" and m.group(3):
+            b = b / 2
+        meta = re.search(r'op_name="([^"]+)"', line)
+        out.append({"kind": kind, "bytes": b, "group": g, "sig": sig[:60],
+                    "op_name": (meta.group(1)[-110:] if meta else "")})
+    out.sort(key=lambda d: -d["bytes"])
+    return out[:n]

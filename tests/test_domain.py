@@ -1,0 +1,91 @@
+"""Decomposition + topology invariants (paper Fig 3), incl. hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.domain import (
+    CartesianDecomposition, PolygonDecomposition, build_topology,
+    us_map_decomposition,
+)
+
+
+@given(nx=st.integers(1, 6), ny=st.integers(1, 6), n_iface=st.integers(1, 12))
+@settings(max_examples=30, deadline=None)
+def test_cartesian_topology_invariants(nx, ny, n_iface):
+    dec = CartesianDecomposition(((-1, 1), (0, 2)), nx, ny)
+    topo = build_topology(dec, n_iface)
+    n_edges_expected = (nx - 1) * ny + nx * (ny - 1)
+    assert int(topo.edge_mask.sum()) == 2 * n_edges_expected  # both endpoints
+    # edge coloring: matching property — neighbor[neighbor[q,k],k] == q
+    for q in range(topo.n_sub):
+        for k in range(topo.n_slots):
+            nb = topo.neighbor[q, k]
+            if nb >= 0:
+                assert topo.neighbor[nb, k] == q
+                # shared physical points identical on both sides
+                np.testing.assert_array_equal(topo.iface_points[q, k],
+                                              topo.iface_points[nb, k])
+                # outward normals are opposite and unit
+                np.testing.assert_allclose(topo.iface_normal[q, k],
+                                           -topo.iface_normal[nb, k])
+                np.testing.assert_allclose(
+                    np.linalg.norm(topo.iface_normal[q, k], axis=-1), 1.0, rtol=1e-6)
+    # perms are permutations of pairs: each (src,dst) unique per slot
+    for perm in topo.perms:
+        srcs = [s for s, _ in perm]
+        dsts = [d for _, d in perm]
+        assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+
+
+@given(nx=st.integers(1, 5), ny=st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_cartesian_interior_sampling(nx, ny):
+    dec = CartesianDecomposition(((0, 1), (0, 1)), nx, ny)
+    rng = np.random.default_rng(0)
+    for q in range(dec.n_sub):
+        pts = dec.sample_interior(q, 50, rng)
+        assert dec.subdomain_contains(q, pts).all()
+
+
+def test_cartesian_rank_map_paper_eq7():
+    dec = CartesianDecomposition(((0, 1), (0, 1)), 4, 3)
+    for q in range(12):
+        ix, iy = dec.grid_index(q)
+        assert dec.rank(ix, iy) == q
+
+
+def test_boundary_segments_only_on_outer_walls():
+    dec = CartesianDecomposition(((0, 1), (0, 1)), 3, 3)
+    assert dec.boundary_segments(4) == []       # center subdomain
+    assert len(dec.boundary_segments(0)) == 2   # corner
+
+
+def test_us_map_ten_regions():
+    dec = us_map_decomposition()
+    assert dec.n_sub == 10
+    topo = build_topology(dec, 16)
+    # the 5x2 lattice has 13 internal interfaces
+    assert int(topo.edge_mask.sum()) == 2 * 13
+    assert topo.max_degree <= topo.n_slots <= topo.max_degree + 1  # Vizing-ish greedy
+    # each region's sampled interior points stay inside its polygon
+    rng = np.random.default_rng(1)
+    for q in range(10):
+        pts = dec.sample_interior(q, 40, rng)
+        assert dec.subdomain_contains(q, pts).all()
+    # regions tile the bounding rectangle: areas sum to 5x2
+    def poly_area(p):
+        x, y = p[:, 0], p[:, 1]
+        return 0.5 * abs(np.dot(x, np.roll(y, 1)) - np.dot(y, np.roll(x, 1)))
+    assert abs(sum(poly_area(p) for p in dec.polygons) - 10.0) < 1e-6
+
+
+def test_polygon_shared_edges_exact():
+    a = np.array([[0, 0], [1, 0], [1, 1], [0, 1]], float)
+    b = np.array([[1, 0], [2, 0], [2, 1], [1, 1]], float)
+    dec = PolygonDecomposition([a, b])
+    edges = dec.interface_edges(8)
+    assert len(edges) == 1
+    e = edges[0]
+    assert (e.a, e.b) == (0, 1)
+    np.testing.assert_allclose(e.points[:, 0], 1.0)      # on shared line x=1
+    np.testing.assert_allclose(e.normal_a, [[1.0, 0.0]] * 8)  # outward from region 0

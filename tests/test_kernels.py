@@ -1,0 +1,66 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, pinn_mlp_forward, ref
+
+
+@pytest.mark.parametrize("d_in,width,depth,out", [
+    (2, 20, 3, 1), (2, 40, 8, 3), (3, 64, 5, 2), (2, 128, 2, 1),
+])
+@pytest.mark.parametrize("act", ["tanh", "sin", "cos"])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_pinn_mlp_kernel_vs_oracle(d_in, width, depth, out, act, dtype):
+    rng = np.random.default_rng(hash((d_in, width, depth, out, act)) % 2**31)
+    dims = [d_in] + [width] * depth + [out]
+    Ws = [jnp.asarray(rng.normal(0, np.sqrt(2 / (a + b)), (a, b)), dtype)
+          for a, b in zip(dims[:-1], dims[1:])]
+    bs = [jnp.asarray(rng.normal(0, 0.1, (b,)), dtype) for b in dims[1:]]
+    a = jnp.asarray(rng.uniform(0.9, 1.1, (depth,)), dtype)
+    x = jnp.asarray(rng.uniform(-1, 1, (100, d_in)), dtype)
+    u, du = pinn_mlp_forward(x, Ws, bs, a, act=act, block_n=32)
+    ur, dur = ref.pinn_mlp_ref(x, Ws, bs, a, act=act)
+    np.testing.assert_allclose(u, ur, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(du, dur, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,H,Hk,S,T,dh,causal", [
+    (2, 4, 2, 128, 128, 64, True),
+    (1, 8, 8, 256, 256, 128, True),
+    (2, 4, 1, 128, 256, 64, False),   # cross-attention-style, MQA grouping
+    (1, 2, 2, 64, 64, 100, True),     # non-lane-aligned head dim (pads to 128)
+])
+def test_flash_attention_vs_oracle(B, H, Hk, S, T, dh, causal):
+    rng = np.random.default_rng(hash((B, H, S, T, dh)) % 2**31)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, S, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, Hk, T, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, Hk, T, dh)), jnp.float32)
+    o = flash_attention(q, k, v, causal=causal, bq=64, bk=64)
+    orf = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(o, orf, rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_bf16():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(0, 1, (1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64)), jnp.bfloat16)
+    o = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    orf = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32), np.asarray(orf, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_pinn_mlp_block_alignment_padding():
+    """N not divisible by block_n: wrapper pads and slices correctly."""
+    rng = np.random.default_rng(9)
+    Ws = [jnp.asarray(rng.normal(0, 0.3, s), jnp.float32) for s in [(2, 16), (16, 1)]]
+    bs = [jnp.zeros((16,)), jnp.zeros((1,))]
+    a = jnp.ones((1,))
+    x = jnp.asarray(rng.uniform(-1, 1, (37, 2)), jnp.float32)
+    u, du = pinn_mlp_forward(x, Ws, bs, a, block_n=32)
+    ur, dur = ref.pinn_mlp_ref(x, Ws, bs, a)
+    assert u.shape == (37, 1) and du.shape == (2, 37, 1)
+    np.testing.assert_allclose(u, ur, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(du, dur, rtol=1e-3, atol=1e-5)

@@ -1,0 +1,88 @@
+"""Interface-loss semantics (paper eqs. 5/6): zero at consistency, message sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import losses, nets
+from repro.core.domain import CartesianDecomposition, build_topology
+from repro.core.halo import exchange_gather
+from repro.core.losses import CPINN, XPINN, LossWeights
+from repro.core.nets import MLPConfig, SubdomainModelConfig
+from repro.core.pdes import Burgers1D
+from repro.data import make_batch
+
+
+def _setup(method, same_net=True):
+    pde = Burgers1D()
+    dec = CartesianDecomposition(((-1, 1), (0, 1)), 2, 2)
+    topo = build_topology(dec, 8)
+    cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 16, 2)})
+    rng = np.random.default_rng(0)
+    batch = make_batch(dec, topo, pde, 32, 16, rng)
+    if same_net:
+        one = nets.init_model(cfg, jax.random.PRNGKey(0))
+        params = jax.tree.map(lambda x: jnp.broadcast_to(x, (4,) + x.shape), one)
+    else:
+        params, _ = nets.stacked_init(cfg, 4, jax.random.PRNGKey(0))
+    codes = jnp.zeros((4,), jnp.int32)
+    return pde, topo, cfg, params, codes, batch.device_arrays()
+
+
+def _terms(pde, topo, cfg, params, codes, b, method):
+    payload = jax.vmap(
+        lambda p, c, ip, nm: losses.payload_dot_normal(
+            losses.interface_payload(pde, cfg, method, p, c, None, ip), nm, method)
+    )(params, codes, b.iface_pts, b.iface_nrm)
+    recv = jax.tree.map(lambda x: exchange_gather(x, topo), payload)
+    _, terms = jax.vmap(
+        lambda p, c, bb, ru, rg: losses.subdomain_loss(
+            pde, cfg, method, LossWeights(), p, c, None, bb, ru, rg)
+    )(params, codes, b, recv["u"], recv["g"])
+    return terms
+
+
+def test_interface_terms_vanish_for_identical_networks():
+    """One global net split across subdomains: u_avg / flux / residual continuity = 0."""
+    for method in (CPINN, XPINN):
+        pde, topo, cfg, params, codes, b = _setup(method, same_net=True)
+        terms = _terms(pde, topo, cfg, params, codes, b, method)
+        np.testing.assert_allclose(np.asarray(terms["mse_avg"]), 0.0, atol=1e-10)
+        np.testing.assert_allclose(np.asarray(terms["mse_iface"]), 0.0, atol=5e-9)
+
+
+def test_interface_terms_positive_for_different_networks():
+    for method in (CPINN, XPINN):
+        pde, topo, cfg, params, codes, b = _setup(method, same_net=False)
+        terms = _terms(pde, topo, cfg, params, codes, b, method)
+        assert float(np.asarray(terms["mse_avg"]).sum()) > 1e-6
+        assert float(np.asarray(terms["mse_iface"]).sum()) > 1e-6
+
+
+def test_payload_wire_size_is_small():
+    """The paper's communication argument: per-point message = n_fields + n_eq
+    scalars (vs O(N_params) for data-parallel allreduce)."""
+    pde, topo, cfg, params, codes, b = _setup(XPINN)
+    p_one = jax.tree.map(lambda x: x[0], params)
+    pay = losses.interface_payload(pde, cfg, XPINN, p_one, 0, None, b.iface_pts[0])
+    pay = losses.payload_dot_normal(pay, b.iface_nrm[0], XPINN)
+    K, nI = topo.n_slots, topo.n_iface
+    assert pay["u"].shape == (K, nI, pde.n_fields)
+    assert pay["g"].shape == (K, nI, pde.n_eq)
+    per_point = pde.n_fields + pde.n_eq
+    from repro.utils import tree_count
+    assert per_point * 4 < 0.01 * tree_count(p_one) * 4  # << params bytes
+
+
+def test_cpinn_flux_normal_antisymmetry():
+    """Sender projects onto ITS outward normal; receiver negates: the loss term
+    |f_q.n + recv|^2 must equal |f_q.n - f_q+.n|^2 of the paper."""
+    pde, topo, cfg, params, codes, b = _setup(CPINN, same_net=True)
+    payload = jax.vmap(
+        lambda p, c, ip, nm: losses.payload_dot_normal(
+            losses.interface_payload(pde, cfg, CPINN, p, c, None, ip), nm, CPINN)
+    )(params, codes, b.iface_pts, b.iface_nrm)
+    recv = jax.tree.map(lambda x: exchange_gather(x, topo), payload)
+    em = np.asarray(b.edge_mask)[..., None, None]
+    own_g, recv_g = np.asarray(payload["g"]), np.asarray(recv["g"])
+    # identical nets -> f continuous -> own + recv == 0 on real edges
+    np.testing.assert_allclose(em * (own_g + recv_g), 0.0, atol=1e-6)

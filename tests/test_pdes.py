@@ -1,0 +1,118 @@
+"""PDE residual/flux correctness: AD vs finite differences + exact solutions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pdes import Burgers1D, HeatConduction2D, NavierStokes2D
+
+
+def _fd_deriv(u_fn, x, v, eps=1e-4):
+    return (u_fn(x + eps * v) - u_fn(x - eps * v)) / (2 * eps)
+
+
+def _fd_deriv2(u_fn, x, v, eps=1e-3):
+    return (u_fn(x + eps * v) - 2 * u_fn(x) + u_fn(x - eps * v)) / eps**2
+
+
+def _random_net(rng, n_out):
+    W1 = jnp.asarray(rng.normal(0, 0.5, (2, 16)), jnp.float32)
+    W2 = jnp.asarray(rng.normal(0, 0.5, (16, n_out)), jnp.float32)
+    return lambda x: jnp.tanh(x @ W1) @ W2
+
+
+def test_burgers_residual_matches_fd():
+    rng = np.random.default_rng(0)
+    u_fn = _random_net(rng, 1)
+    pde = Burgers1D()
+    ex, et = jnp.array([1.0, 0.0]), jnp.array([0.0, 1.0])
+    for _ in range(5):
+        x = jnp.asarray(rng.uniform(-1, 1, (2,)), jnp.float32)
+        r = pde.residual(u_fn, x)
+        u = u_fn(x)
+        fd = (_fd_deriv(u_fn, x, et) + u * _fd_deriv(u_fn, x, ex)
+              - pde.nu * _fd_deriv2(u_fn, x, ex))
+        np.testing.assert_allclose(r, fd, rtol=2e-2, atol=2e-3)
+
+
+def test_burgers_flux_conservation_form():
+    """Space-time flux F=(u^2/2 - nu u_x, u): residual == div F pointwise."""
+    rng = np.random.default_rng(1)
+    u_fn = _random_net(rng, 1)
+    pde = Burgers1D()
+    for _ in range(5):
+        x = jnp.asarray(rng.uniform(-1, 1, (2,)), jnp.float32)
+        div = 0.0
+        for i in range(2):
+            v = jnp.zeros(2).at[i].set(1.0)
+            div = div + _fd_deriv(lambda y: pde.flux(u_fn, y)[:, i], x, v)
+        np.testing.assert_allclose(div, pde.residual(u_fn, x), rtol=3e-2, atol=3e-3)
+
+
+def test_burgers_exact_cole_hopf_satisfies_ic_bc():
+    pde = Burgers1D()
+    x = np.linspace(-1, 1, 101)
+    ic = pde.exact(np.stack([x, np.zeros_like(x)], 1))
+    np.testing.assert_allclose(ic[:, 0], -np.sin(np.pi * x), atol=1e-6)
+    walls = pde.exact(np.array([[1.0, 0.5], [-1.0, 0.5], [1.0, 0.9]]))
+    np.testing.assert_allclose(walls, 0.0, atol=1e-4)
+    # IC is -sin(pi x): u stays negative for x>0 and decays; u(0.5, 0.5) ~ -0.59
+    mid = pde.exact(np.array([[0.5, 0.5]]))[0, 0]
+    assert -0.65 < mid < -0.5
+    # antisymmetry u(-x, t) = -u(x, t)
+    pts = np.array([[0.3, 0.4], [-0.3, 0.4], [0.7, 0.8], [-0.7, 0.8]])
+    u = pde.exact(pts)[:, 0]
+    np.testing.assert_allclose(u[0], -u[1], rtol=1e-5)
+    np.testing.assert_allclose(u[2], -u[3], rtol=1e-5)
+
+
+def test_ns_residual_zero_at_kovasznay():
+    """Kovasznay flow is an exact steady NS solution."""
+    re = 40.0
+    lam = re / 2 - np.sqrt(re**2 / 4 + 4 * np.pi**2)
+    pde = NavierStokes2D(re=re)
+
+    def exact(x):
+        ex = jnp.exp(lam * x[0])
+        u = 1 - ex * jnp.cos(2 * jnp.pi * x[1])
+        v = lam / (2 * jnp.pi) * ex * jnp.sin(2 * jnp.pi * x[1])
+        p = 0.5 * (1 - jnp.exp(2 * lam * x[0]))
+        return jnp.stack([u, v, p])
+
+    rng = np.random.default_rng(2)
+    for _ in range(8):
+        x = jnp.asarray(rng.uniform(0.1, 0.9, (2,)), jnp.float32)
+        r = pde.residual(exact, x)
+        np.testing.assert_allclose(r, 0.0, atol=5e-3)
+
+
+def test_heat_inverse_residual_zero_at_exact():
+    pde = HeatConduction2D()
+
+    def exact(x):
+        T = 20.0 * jnp.exp(-0.1 * x[1])
+        K = 20.0 + jnp.exp(0.1 * x[1]) * jnp.sin(0.5 * x[0])
+        return jnp.stack([T, K])
+
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        x = jnp.asarray(rng.uniform(0, 5, (2,)), jnp.float32)
+        np.testing.assert_allclose(pde.residual(exact, x), 0.0, atol=2e-3)
+    # exact() helper agrees with the closure
+    pts = rng.uniform(0, 5, (10, 2)).astype(np.float32)
+    ref = pde.exact(pts)
+    got = np.stack([np.asarray(exact(jnp.asarray(p))) for p in pts])
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+def test_heat_flux_is_K_grad_T():
+    pde = HeatConduction2D()
+    rng = np.random.default_rng(4)
+    W = jnp.asarray(rng.normal(0, 0.4, (2, 12)), jnp.float32)
+    W2 = jnp.asarray(rng.normal(0, 0.4, (12, 2)), jnp.float32)
+    u_fn = lambda x: jnp.tanh(x @ W) @ W2 + jnp.array([1.0, 3.0])
+    x = jnp.asarray(rng.uniform(0, 1, (2,)), jnp.float32)
+    fl = pde.flux(u_fn, x)[0]
+    K = u_fn(x)[1]
+    gT = jax.jacfwd(lambda y: u_fn(y)[0])(x)
+    np.testing.assert_allclose(fl, K * gT, rtol=1e-5)
