@@ -4,77 +4,135 @@ functions of (#residual points | depth | width), 1-D Burgers, single worker.
 The paper's finding: residual-loss evaluation (AD graph traversal) dominates and
 grows with all three knobs.  We time the three phases with separate jitted
 closures on CPU.
+
+``--path pallas`` additionally times the fused-kernel residual path
+(``losses.residual_eval`` with a ResidualPath — the production hot path: one
+fused pass for u / du / d²u instead of per-point jvp closures under vmap; on
+non-TPU backends this compiles the batched jnp recurrence, on TPU the Pallas
+kernel) and writes ``BENCH_residual.json`` at the repo root with both timings
+per configuration.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# allow `python benchmarks/fig4_cost_profile.py` (script mode) as well as -m,
+# with or without PYTHONPATH=src
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)
+sys.path.insert(0, os.path.join(_REPO, "src"))
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.losses import LossWeights, vanilla_pinn_loss
+from repro.core import losses
+from repro.core.losses import LossWeights, ResidualPath, vanilla_pinn_loss
 from repro.core.nets import MLPConfig, SubdomainModelConfig, init_model, ACT_TANH
 from repro.core.domain import CartesianDecomposition
 from repro.core.pdes import Burgers1D
 from repro.data import make_vanilla_batch
 from repro.utils import time_fn
 
-from benchmarks.common import emit
+from benchmarks.common import REPO, emit
+
+BENCH_JSON = os.path.join(REPO, "BENCH_residual.json")
 
 
-def _phases(pde, cfg, params, batch):
+def _phases(pde, cfg, params, batch, res_path: ResidualPath | None = None):
     w = LossWeights()
 
     @jax.jit
     def data_loss(p):
-        from repro.core import losses, nets
+        from repro.core import nets
         u_fn = nets.scalar_field_fn(cfg, p, ACT_TANH, None)
         pred = jax.vmap(u_fn)(batch.data_pts)
         return jnp.sum((pred - batch.data_vals) ** 2)
 
     @jax.jit
     def res_loss(p):
-        from repro.core import nets
-        u_fn = nets.scalar_field_fn(cfg, p, ACT_TANH, None)
-        r = jax.vmap(lambda x: pde.residual(u_fn, x))(batch.res_pts)
+        r = losses.residual_eval(pde, cfg, p, ACT_TANH, None, batch.res_pts, res_path)
         return jnp.sum(r ** 2)
 
     @jax.jit
     def backward(p):
         return jax.grad(lambda pp: vanilla_pinn_loss(pde, cfg, w, pp, ACT_TANH,
-                                                     None, batch)[0])(p)
+                                                     None, batch, path=res_path)[0])(p)
 
     return data_loss, res_loss, backward
 
 
-def run(iters: int = 10):
+def run(iters: int = 10, path: str = "jvp", smoke: bool = False):
     pde = Burgers1D()
     dec = CartesianDecomposition(((-1, 1), (0, 1)), 1, 1)
     rng = np.random.default_rng(0)
-    rows = []
+    rows, records = [], []
+    pallas = path == "pallas"
 
     def one(tag, n_res, depth, width):
         cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, width, depth)})
         params = init_model(cfg, jax.random.PRNGKey(0))
         batch = make_vanilla_batch(dec, pde, n_res, 200, rng)
         d, r, b = _phases(pde, cfg, params, batch)
-        rows.append((f"fig4/{tag}/data_loss", round(time_fn(d, params, iters=iters) * 1e6, 1), "us"))
-        rows.append((f"fig4/{tag}/residual_loss", round(time_fn(r, params, iters=iters) * 1e6, 1), "us"))
-        rows.append((f"fig4/{tag}/backward", round(time_fn(b, params, iters=iters) * 1e6, 1), "us"))
+        t_data = time_fn(d, params, iters=iters) * 1e6
+        t_jvp = time_fn(r, params, iters=iters) * 1e6
+        t_bwd = time_fn(b, params, iters=iters) * 1e6
+        rows.append((f"fig4/{tag}/data_loss", round(t_data, 1), "us"))
+        rows.append((f"fig4/{tag}/residual_loss", round(t_jvp, 1), "us"))
+        rows.append((f"fig4/{tag}/backward", round(t_bwd, 1), "us"))
+        if pallas:
+            rp = ResidualPath(act="tanh")
+            _, rk, bk = _phases(pde, cfg, params, batch, res_path=rp)
+            t_pal = time_fn(rk, params, iters=iters) * 1e6
+            t_bwd_pal = time_fn(bk, params, iters=iters) * 1e6
+            rows.append((f"fig4/{tag}/residual_loss_pallas", round(t_pal, 1), "us"))
+            rows.append((f"fig4/{tag}/backward_pallas", round(t_bwd_pal, 1), "us"))
+            rows.append((f"fig4/{tag}/residual_speedup", round(t_jvp / t_pal, 2), "x"))
+            records.append({
+                "config": tag, "n_res": n_res, "depth": depth, "width": width,
+                "backend": jax.default_backend(),
+                "jvp_us": round(t_jvp, 1), "pallas_us": round(t_pal, 1),
+                "speedup": round(t_jvp / t_pal, 3),
+                "backward_jvp_us": round(t_bwd, 1),
+                "backward_pallas_us": round(t_bwd_pal, 1),
+            })
 
-    # (a) vs #residual points (200 data pts, 8x40 net)
-    for n in (1000, 4000, 10000):
-        one(f"nres={n}", n, 8, 40)
-    # (b) vs depth (10000 residual points, width 40)
-    for depth in (4, 8, 12):
-        one(f"depth={depth}", 10000, depth, 40)
-    # (c) vs width (10000 residual points, 8 hidden layers)
-    for width in (20, 40, 80):
-        one(f"width={width}", 10000, 8, width)
+    if smoke:
+        one("nres=1000", 1000, 4, 40)
+    else:
+        # (a) vs #residual points (200 data pts, 8x40 net)
+        for n in (1000, 4000, 10000):
+            one(f"nres={n}", n, 8, 40)
+        # (b) vs depth (10000 residual points, width 40)
+        for depth in (4, 8, 12):
+            one(f"depth={depth}", 10000, depth, 40)
+        # (c) vs width (10000 residual points, 8 hidden layers)
+        for width in (20, 40, 80):
+            one(f"width={width}", 10000, 8, width)
+
+    if pallas:
+        # smoke runs get their own file so a CI smoke pass never clobbers the
+        # full-grid measurement artifact that EXPERIMENTS.md cites
+        out = BENCH_JSON.replace(".json", "_smoke.json") if smoke else BENCH_JSON
+        with open(out, "w") as f:
+            json.dump({"unit": "us", "backend": jax.default_backend(),
+                       "iters": iters, "rows": records}, f, indent=1)
+        print(f"wrote {out}")
     return rows
 
 
 def main():
-    emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", choices=("jvp", "pallas"), default="jvp",
+                    help="residual evaluation: per-point jvp closures or the "
+                         "fused kernel (also times jvp for the comparison)")
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true", help="single tiny config")
+    args = ap.parse_args()
+    emit(run(iters=args.iters, path=args.path, smoke=args.smoke))
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
 """Roofline table generator: aggregates the dry-run JSONs into the EXPERIMENTS.md
-tables (§Dry-run and §Roofline)."""
+tables (§Dry-run and §Roofline), plus an analytic roofline of the residual-loss
+hot path (``--path {jvp,pallas,both}``) comparing the per-point jvp closures
+against the fused Pallas kernel."""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -9,6 +12,50 @@ import os
 from benchmarks.common import RESULTS, emit
 
 DRYRUN = os.path.join(RESULTS, "dryrun")
+
+# reference accelerator for the analytic residual roofline (TPU v4-ish)
+PEAK_FLOPS = 275e12   # fp32-accumulated MXU
+PEAK_HBM = 1.2e12     # bytes/s
+WPAD = 128
+
+
+def residual_rows(path: str = "both", n: int = 10000, depth: int = 8,
+                  width: int = 40, d_in: int = 2) -> list[tuple]:
+    """Analytic FLOPs / HBM bytes / arithmetic intensity of one residual-loss
+    evaluation (Fig-4 center config by default) for each path.
+
+    jvp path: the per-point forward-over-forward closures materialize each
+    layer's primal + 1 first-order + 2 second-order tangent chains per input
+    direction in HBM (read + write per layer).  pallas path: one HBM read of
+    the point block + the weight stack, one write of (u, du, d2u); all
+    intermediates stay in VMEM, at the cost of padding width to 128 lanes.
+    """
+    streams = 1 + 2 * d_in          # primal + (t, s) per direction
+    L = depth + 1                   # affine layers
+    rows = []
+
+    def emit_one(tag, flops, byts):
+        ai = flops / byts
+        t_c, t_m = flops / PEAK_FLOPS, byts / PEAK_HBM
+        rows.append((f"roofline/residual/{tag}/flops", round(flops / 1e9, 3), "GF"))
+        rows.append((f"roofline/residual/{tag}/hbm_bytes", round(byts / 2**20, 2), "MiB"))
+        rows.append((f"roofline/residual/{tag}/arith_intensity", round(ai, 1), "F/B"))
+        rows.append((f"roofline/residual/{tag}/bound",
+                     "compute" if t_c >= t_m else "memory", ""))
+        rows.append((f"roofline/residual/{tag}/est_time",
+                     round(max(t_c, t_m) * 1e6, 2), "us"))
+
+    if path in ("jvp", "both"):
+        flops = 2 * n * width * width * L * streams
+        byts = 4 * n * width * L * streams * 2   # per-layer HBM round-trips
+        emit_one("jvp", flops, byts)
+    if path in ("pallas", "both"):
+        flops = 2 * n * WPAD * WPAD * L * streams  # padded MXU tiles
+        byts = 4 * (n * WPAD                       # x block read
+                    + L * WPAD * WPAD              # weight stack read
+                    + streams * n * WPAD)          # (u, du, d2u) write
+        emit_one("pallas", flops, byts)
+    return rows
 
 
 def load(mesh: str = "16x16") -> list[dict]:
@@ -48,8 +95,8 @@ def markdown_table(mesh: str = "16x16") -> str:
     return "\n".join(rows)
 
 
-def run():
-    rows = []
+def run(path: str = "both"):
+    rows = residual_rows(path)
     for r in load("16x16"):
         if not r.get("ok"):
             continue
@@ -65,7 +112,11 @@ def run():
 
 
 def main():
-    emit(run())
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", choices=("jvp", "pallas", "both"), default="both",
+                    help="which residual-path roofline rows to emit")
+    args = ap.parse_args()
+    emit(run(path=args.path))
     print()
     print(markdown_table())
 

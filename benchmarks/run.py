@@ -1,10 +1,15 @@
 """Benchmark driver: one function per paper table/figure.
 
-``python -m benchmarks.run [--quick] [--only fig4,fig6,...]``
+``python -m benchmarks.run [--quick] [--smoke] [--only fig4,fig6,...]``
 
 Prints ``name,value,unit`` CSV rows per benchmark; raw measurements land in
 benchmarks/results/*.json.  The roofline rows read the dry-run outputs
 (run ``python -m repro.launch.dryrun`` first for those).
+
+``--smoke`` is the CI-fast mode: a single tiny fig4 configuration with the
+jvp-vs-pallas residual comparison plus the analytic residual roofline —
+seconds, not minutes; the full kernel sweeps stay on-demand
+(``pytest -m kernel`` / the unflagged benchmark runs).
 """
 from __future__ import annotations
 
@@ -20,11 +25,19 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig6,fig8,fig9,table2,fig13,roofline")
     ap.add_argument("--quick", action="store_true", help="fewer sizes/iters")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-fast subset: tiny fig4 jvp-vs-pallas + roofline")
     args = ap.parse_args()
 
     from benchmarks import (fig4_cost_profile, fig6_comp_comm, fig8_weak_scaling,
                             fig9_strong_scaling, fig13_inverse, roofline,
                             table2_spacetime)
+
+    if args.smoke:
+        rows = fig4_cost_profile.run(iters=3, path="pallas", smoke=True)
+        rows += roofline.residual_rows("both")
+        emit(rows)
+        return
 
     quick = args.quick
     suite = {

@@ -29,6 +29,9 @@ def main():
     ap.add_argument("--steps", type=int, default=1500)
     ap.add_argument("--nx", type=int, default=2)
     ap.add_argument("--nt", type=int, default=2)
+    ap.add_argument("--path", choices=("jvp", "pallas"), default="pallas",
+                    help="residual evaluation: fused kernel (default) or the "
+                         "per-point jvp oracle")
     args = ap.parse_args()
 
     pde = Burgers1D()
@@ -40,7 +43,9 @@ def main():
     model_cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 24, 4)})
     batch = make_batch(decomp, topo, pde, n_res=1000, n_bnd=80,
                        rng=np.random.default_rng(0))
-    trainer = ReferenceTrainer(pde, model_cfg, topo, DDConfig(method=XPINN), lrs=2e-3)
+    trainer = ReferenceTrainer(pde, model_cfg, topo,
+                               DDConfig(method=XPINN, residual_path=args.path),
+                               lrs=2e-3)
     state = trainer.init(0)
     b = batch.device_arrays()
 

@@ -3,7 +3,7 @@ from repro.core.domain import (
     CartesianDecomposition, PolygonDecomposition, Topology, build_topology,
     us_map_decomposition,
 )
-from repro.core.losses import CPINN, XPINN, LossWeights, SubBatch
+from repro.core.losses import CPINN, XPINN, LossWeights, ResidualPath, SubBatch
 from repro.core.nets import MLPConfig, SubdomainModelConfig
 from repro.core.pdes import Burgers1D, HeatConduction2D, NavierStokes2D
 from repro.core.trainer import (

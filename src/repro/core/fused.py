@@ -1,0 +1,76 @@
+"""Fused derivative-bundle evaluation for plain stacked-MLP subdomain models.
+
+Bridge between the loss layer and the fused Pallas kernel
+(:func:`repro.kernels.pinn_mlp_forward2`): evaluates (u, du/dx_j, d²u/dx_j²)
+for EVERY field network of a :class:`~repro.core.nets.SubdomainModelConfig` in
+one kernel pass per net, concatenating field outputs exactly like
+``nets.model_apply``.  The PDE then assembles residual / flux from the bundle
+via ``residual_from_derivs`` / ``flux_from_derivs`` without re-entering the
+network — replacing the per-point ``jax.jvp``-under-``vmap`` closures that
+round-trip every layer's activations through HBM (paper Fig 4's dominant cost).
+
+Model-semantics folding (so the kernel stays a plain stacked MLP):
+
+* adaptive slopes: the kernel computes phi(a_l h); ``mlp_apply`` computes
+  phi(slope_scale * a_l * h) (a_l = 1 frozen when not adaptive), so we pass
+  ``slope_scale * a`` (or ``slope_scale * ones``) — gradients w.r.t. the
+  trainable slopes flow through the product.
+* width masks: ``mlp_apply`` zeroes masked hidden units AFTER each activation;
+  multiplying the ROWS of every following weight matrix by the mask is exactly
+  equivalent (masked units then contribute nothing to any downstream value or
+  tangent), so masks fold into the packed weight stack for free.
+
+Activation selection is STATIC per call (the kernel is specialized on the
+activation); heterogeneous per-subdomain activations therefore stay on the jvp
+fallback — see ``trainer._DDCommon`` for the dispatch decision.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.nets import SubdomainModelConfig, act_name
+from repro.kernels import ops
+
+
+def uniform_act_name(act_codes) -> str | None:
+    """The single activation name shared by ALL subdomains, or None if they
+    differ (kernel dispatch requires a static activation)."""
+    if act_codes is None:
+        return "tanh"
+    names = [act_name(c) for c in act_codes]
+    return names[0] if len(set(names)) == 1 else None
+
+
+def model_bundle(
+    cfg: SubdomainModelConfig,
+    params: dict,
+    x,                       # (n, dim)
+    act: str,
+    width_masks: dict | None = None,
+    block_n: int = 256,
+    interpret: bool | None = None,
+):
+    """Fused (u, du, d2u) for the full multi-net subdomain model.
+
+    Returns u (n, F), du (dim, n, F), d2u (dim, n, F) with F = cfg.out_dim and
+    d2u the diagonal second derivatives, differentiable w.r.t. params via the
+    kernel's custom VJP.
+    """
+    us, dus, d2us = [], [], []
+    for name, c in cfg.nets.items():
+        p = params[name]
+        Ws, bs = list(p["W"]), list(p["b"])
+        if c.adaptive:
+            a = c.slope_scale * p["a"]
+        else:
+            a = jnp.full((c.depth,), c.slope_scale, x.dtype)
+        wm = None if width_masks is None else width_masks.get(name)
+        if wm is not None:
+            Ws = [Ws[0]] + [wm[:, None] * w for w in Ws[1:]]
+        u, du, d2u = ops.pinn_mlp_forward2(x, Ws, bs, a, act=act,
+                                           block_n=block_n, interpret=interpret)
+        us.append(u)
+        dus.append(du)
+        d2us.append(d2u)
+    return (jnp.concatenate(us, axis=-1), jnp.concatenate(dus, axis=-1),
+            jnp.concatenate(d2us, axis=-1))

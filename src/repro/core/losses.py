@@ -24,7 +24,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core import nets
+from repro.core import fused, nets
 from repro.core.pdes import PDE
 
 CPINN, XPINN = 0, 1
@@ -39,6 +39,23 @@ class LossWeights:
     residual: float = 1.0
     u_avg: float = 20.0
     iface: float = 1.0
+
+
+@dataclass(frozen=True)
+class ResidualPath:
+    """Static dispatch record: route residual/payload evaluation through the
+    fused second-order kernel (``kernels.pinn_mlp_forward2``).
+
+    ``act`` is the STATIC activation the kernel is specialized on — the trainer
+    only constructs a ResidualPath when every subdomain shares one activation
+    (and the PDE implements the derivative-bundle methods).  ``None`` anywhere a
+    path is accepted means the per-point jvp fallback (the paper's §4.1
+    graph-based differentiation), which stays the correctness oracle.
+    """
+
+    act: str = "tanh"
+    block_n: int = 256
+    interpret: bool | None = None  # None: compiled kernel on TPU, jnp recurrence elsewhere
 
 
 @jax.tree_util.register_dataclass
@@ -61,14 +78,39 @@ def _u_fn(pde: PDE, cfg, params, act_code, width_masks):
     return nets.scalar_field_fn(cfg, params, act_code, width_masks)
 
 
+def residual_eval(pde: PDE, cfg, params, act_code, width_masks, pts, path):
+    """(n, n_eq) PDE residuals — fused-kernel bundle when a ResidualPath is
+    given, per-point jvp closures otherwise."""
+    if path is not None:
+        u, du, d2u = fused.model_bundle(cfg, params, pts, path.act, width_masks,
+                                        path.block_n, path.interpret)
+        return pde.residual_from_derivs(pts, u, du, d2u)
+    u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
+    return jax.vmap(lambda x: pde.residual(u_fn, x))(pts)
+
+
 def interface_payload(
     pde: PDE, cfg, method: int, params, act_code, width_masks,
     iface_pts: jax.Array,  # (K, n_iface, dim)
+    path: ResidualPath | None = None,
 ) -> dict[str, jax.Array]:
     """Quantities SENT to neighbors: u and (f.n | F) at own interface points."""
-    u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
     K, nI, dim = iface_pts.shape
     flat = iface_pts.reshape(K * nI, dim)
+    if path is not None:
+        # cPINN flux needs only (u, du); the second-order chain computed here is
+        # deliberate waste: forward2 is the one fused entry point with a custom
+        # VJP (training differentiates the payload), and interface points are
+        # O(K * n_iface) — tiny next to the residual set that needs d2u anyway.
+        ub, dub, d2ub = fused.model_bundle(cfg, params, flat, path.act,
+                                           width_masks, path.block_n, path.interpret)
+        u = ub.reshape(K, nI, pde.n_fields)
+        if method == CPINN:
+            g = pde.flux_from_derivs(flat, ub, dub).reshape(K, nI, pde.n_eq, dim)
+        else:
+            g = pde.residual_from_derivs(flat, ub, dub, d2ub).reshape(K, nI, pde.n_eq)
+        return {"u": u, "g": g}
+    u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
     u = jax.vmap(u_fn)(flat).reshape(K, nI, pde.n_fields)
     if method == CPINN:
         fl = jax.vmap(lambda x: pde.flux(u_fn, x))(flat)  # (K*nI, n_eq, dim)
@@ -98,6 +140,7 @@ def subdomain_loss(
     recv_u: jax.Array,   # (K, n_iface, n_fields) neighbor u at shared points
     recv_g: jax.Array,   # (K, n_iface, n_eq)     neighbor f.n_nbr (cPINN) or F (XPINN)
     own: dict | None = None,  # precomputed normal-projected interface payload
+    path: ResidualPath | None = None,  # fused-kernel dispatch (None: jvp oracle)
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """Eq. (5) (cPINN) or eq. (6) (XPINN) for one subdomain."""
     u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
@@ -109,14 +152,15 @@ def subdomain_loss(
     mse_data = jnp.sum(w * (pred - batch.data_vals) ** 2) / jnp.maximum(jnp.sum(w), 1.0)
 
     # --- MSE_F: PDE residual --------------------------------------------------
-    res = jax.vmap(lambda x: pde.residual(u_fn, x))(batch.res_pts)  # (n_res, n_eq)
+    res = residual_eval(pde, cfg, params, act_code, width_masks, batch.res_pts, path)
     mse_res = jnp.sum(batch.res_mask[:, None] * res**2) / jnp.maximum(
         jnp.sum(batch.res_mask) * pde.n_eq, 1.0
     )
 
     # --- interface terms -----------------------------------------------------
     if own is None:
-        own = interface_payload(pde, cfg, method, params, act_code, width_masks, batch.iface_pts)
+        own = interface_payload(pde, cfg, method, params, act_code, width_masks,
+                                batch.iface_pts, path)
         own = payload_dot_normal(own, batch.iface_nrm, method)
     em = batch.edge_mask[:, None, None]
 
@@ -143,14 +187,15 @@ def subdomain_loss(
 
 
 def vanilla_pinn_loss(
-    pde: PDE, cfg, weights: LossWeights, params, act_code, width_masks, batch: SubBatch
+    pde: PDE, cfg, weights: LossWeights, params, act_code, width_masks,
+    batch: SubBatch, path: ResidualPath | None = None,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
     """Eq. (3): the single-domain PINN loss (data-parallel baseline, Fig 1a)."""
     u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
     pred = jax.vmap(u_fn)(batch.data_pts)
     w = batch.data_comp * batch.data_mask[:, None]
     mse_data = jnp.sum(w * (pred - batch.data_vals) ** 2) / jnp.maximum(jnp.sum(w), 1.0)
-    res = jax.vmap(lambda x: pde.residual(u_fn, x))(batch.res_pts)
+    res = residual_eval(pde, cfg, params, act_code, width_masks, batch.res_pts, path)
     mse_res = jnp.sum(batch.res_mask[:, None] * res**2) / jnp.maximum(
         jnp.sum(batch.res_mask) * pde.n_eq, 1.0
     )

@@ -27,6 +27,16 @@ ACT_TANH, ACT_SIN, ACT_COS = 0, 1, 2
 _ACT_NAMES = {"tanh": ACT_TANH, "sin": ACT_SIN, "cos": ACT_COS}
 
 
+def act_name(code: int | str) -> str:
+    """Concrete activation code/name -> canonical name (inverse of _ACT_NAMES).
+    Used by the fused-kernel dispatch, which specializes on the name statically."""
+    if isinstance(code, str):
+        if code not in _ACT_NAMES:
+            raise ValueError(f"unknown activation {code!r}")
+        return code
+    return {v: k for k, v in _ACT_NAMES.items()}[int(code)]
+
+
 def activation(z: jax.Array, code: jax.Array) -> jax.Array:
     """Branchless per-subdomain activation select (code is a traced scalar)."""
     return jnp.where(code == ACT_TANH, jnp.tanh(z),

@@ -34,7 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import halo, losses, nets
+from repro import utils
+from repro.core import fused, halo, losses, nets
 from repro.core.domain import Decomposition, Topology
 from repro.core.losses import CPINN, XPINN, LossWeights, SubBatch
 from repro.core.nets import SubdomainModelConfig
@@ -51,6 +52,7 @@ class DDConfig:
     local_steps: int = 1             # k Adam steps per halo exchange (k=1: Algorithm 1)
     adam: adam_lib.AdamConfig = field(default_factory=adam_lib.AdamConfig)
     disable_exchange: bool = False   # benchmark ablation: comm replaced by own payload
+    residual_path: str = "jvp"       # "jvp" (per-point closures) | "pallas" (fused kernel)
 
 
 @jax.tree_util.register_dataclass
@@ -77,6 +79,25 @@ class _DDCommon:
         self.pde, self.model_cfg, self.topo, self.cfg = pde, model_cfg, topo, cfg
         n = topo.n_sub
         self._act_codes_in = act_codes
+        # fused-kernel residual dispatch: requires (a) a single activation
+        # shared by all subdomains (the kernel is specialized statically) and
+        # (b) a PDE exposing the batched derivative-bundle methods.  An
+        # explicitly requested pallas path that can't be honored is an error,
+        # not a silent fallback.
+        self.res_path = None
+        if cfg.residual_path == "pallas":
+            act = fused.uniform_act_name(act_codes)
+            if act is None:
+                raise ValueError(
+                    "residual_path='pallas' needs one activation shared by all "
+                    f"subdomains; got {act_codes}")
+            if not type(pde).supports_derivs():
+                raise ValueError(
+                    f"residual_path='pallas': {pde.name} lacks residual_from_derivs/"
+                    "flux_from_derivs")
+            self.res_path = losses.ResidualPath(act=act)
+        elif cfg.residual_path != "jvp":
+            raise ValueError(f"unknown residual_path {cfg.residual_path!r}")
         self.lrs = jnp.full((n,), float(lrs)) if np.isscalar(lrs) else jnp.asarray(
             np.array(lrs, np.float32)
         )
@@ -102,7 +123,8 @@ class _DDCommon:
     # ---- single-subdomain pieces (no stacked axis) -------------------------------
     def _payload(self, params, act_code, wmask, batch: SubBatch):
         p = losses.interface_payload(
-            self.pde, self.model_cfg, self.cfg.method, params, act_code, wmask, batch.iface_pts
+            self.pde, self.model_cfg, self.cfg.method, params, act_code, wmask,
+            batch.iface_pts, path=self.res_path,
         )
         return losses.payload_dot_normal(p, batch.iface_nrm, self.cfg.method)
 
@@ -110,6 +132,7 @@ class _DDCommon:
         return losses.subdomain_loss(
             self.pde, self.model_cfg, self.cfg.method, self.cfg.weights,
             params, act_code, wmask, batch, recv["u"], recv["g"], own=own,
+            path=self.res_path,
         )
 
     def _maybe_stop(self, recv):
@@ -219,7 +242,7 @@ class DistributedDDTrainer(_DDCommon):
             unsq = lambda t: jax.tree.map(lambda x: x[None], t)
             return unsq(params), unsq(opt_l), step + 1, unsq(terms)
 
-        shmapped = jax.shard_map(
+        shmapped = utils.shard_map(
             local_step,
             mesh=self.mesh,
             in_specs=(spec, spec, P(), spec, spec, spec, spec),
@@ -267,12 +290,20 @@ class DataParallelTrainer:
         compression: CompressionConfig | None = None,
         mesh: Mesh | None = None,
         adam_cfg: adam_lib.AdamConfig = adam_lib.AdamConfig(),
+        residual_path: str = "jvp",
     ):
         self.pde, self.model_cfg, self.weights = pde, model_cfg, weights
         self.n = n_workers
         self.lr = lr * (n_workers if scale_lr else 1)
         self.compression = compression
         self.adam_cfg = adam_cfg
+        self.res_path = None
+        if residual_path == "pallas":
+            if not type(pde).supports_derivs():
+                raise ValueError(f"residual_path='pallas': {pde.name} lacks bundle methods")
+            self.res_path = losses.ResidualPath(act="tanh")  # DP baseline is tanh-only
+        elif residual_path != "jvp":
+            raise ValueError(f"unknown residual_path {residual_path!r}")
         if mesh is None:
             devs = jax.devices()
             assert len(devs) >= n_workers
@@ -283,7 +314,12 @@ class DataParallelTrainer:
     def init(self, seed: int = 0):
         params = nets.init_model(self.model_cfg, jax.random.PRNGKey(seed))
         opt = adam_lib.init_adam(params)
-        err = jax.tree.map(jnp.zeros_like, params) if self.compression else None
+        # error-feedback buffer is PER-WORKER state (each rank accumulates the
+        # error of compressing ITS OWN pre-allreduce gradient): stacked leading
+        # n axis, sharded over "sub" — replicating it would silently average
+        # away the feedback (regression-tested in test_parallel_equivalence).
+        err = (jax.tree.map(lambda x: jnp.zeros((self.n,) + x.shape, x.dtype), params)
+               if self.compression else None)
         return {"params": params, "opt": opt, "err": err, "step": jnp.zeros((), jnp.int32)}
 
     def _build_step(self):
@@ -294,12 +330,15 @@ class DataParallelTrainer:
 
             def loss_fn(p):
                 return losses.vanilla_pinn_loss(
-                    self.pde, self.model_cfg, self.weights, p, nets.ACT_TANH, None, batch
+                    self.pde, self.model_cfg, self.weights, p, nets.ACT_TANH, None,
+                    batch, path=self.res_path,
                 )
 
             (_, terms), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
             if comp is not None:
-                g, err_new = compress_decompress(g, err, comp)
+                err_l = jax.tree.map(lambda x: x[0], err)  # this worker's shard
+                g, err_l = compress_decompress(g, err_l, comp)
+                err_new = jax.tree.map(lambda x: x[None], err_l)
             else:
                 err_new = err
             # the paper's distributed optimizer: allreduce-mean of loss gradients
@@ -309,8 +348,8 @@ class DataParallelTrainer:
             return new_params, new_opt, err_new, step + 1, terms
 
         spec_b = P("sub")
-        err_spec = P() if self.compression else P()
-        shmapped = jax.shard_map(
+        err_spec = P("sub") if self.compression else P()
+        shmapped = utils.shard_map(
             local_step,
             mesh=self.mesh,
             in_specs=(P(), P(), err_spec, P(), spec_b),

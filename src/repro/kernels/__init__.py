@@ -1,7 +1,9 @@
 """Pallas TPU kernels (validated in interpret mode on CPU; compiled on TPU).
 
-pinn_mlp        — fused PINN MLP forward + input-Jacobian (the paper's Fig-4
-                  hot spot: residual/interface evaluation).
+pinn_mlp        — fused PINN MLP forward + input-Jacobian (+ second-order
+                  variant with diagonal input-Hessian and a custom VJP — the
+                  production residual-loss path; the paper's Fig-4 hot spot).
 flash_attention — causal GQA flash attention (32k-prefill roofline hot spot).
 """
-from repro.kernels.ops import flash_attention, pinn_mlp_forward
+from repro.kernels.ops import (flash_attention, pack_mlp, pinn_mlp_forward,
+                               pinn_mlp_forward2, pinn_mlp_forward_packed)

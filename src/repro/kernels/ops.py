@@ -8,8 +8,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.pinn_mlp import WPAD, pinn_mlp_pallas
+from repro.kernels.pinn_mlp import WPAD, pinn_mlp_pallas, pinn_mlp_pallas2
 
 
 def _on_tpu() -> bool:
@@ -25,6 +26,32 @@ def _pad_to(x, n, axis):
     return jnp.pad(x, widths)
 
 
+def pack_mlp(Ws, bs, a):
+    """Pad + stack an MLP pytree into the kernel's MXU-aligned layout.
+
+    Returns (w_stack (L, WPAD, WPAD), b_stack (L, WPAD), a_vec (L,)).
+
+    This is the hoistable 'prepare' step: the pad/stack ops are pure, so when a
+    jitted step evaluates several fused calls on the SAME weights (residual +
+    interface payload inside one loss), XLA CSE collapses the duplicate packing
+    into one instance (verified by an HLO pad-count test in
+    tests/test_kernels_pinn_mlp.py).  Callers outside a common jit scope (e.g.
+    a serve loop with frozen weights) should call this once and use
+    :func:`pinn_mlp_forward_packed`.
+    """
+    L = len(Ws)
+    w_stack = jnp.stack([_pad_to(_pad_to(w, WPAD, 0), WPAD, 1) for w in Ws])
+    b_stack = jnp.stack([_pad_to(b, WPAD, 0) for b in bs])
+    a_vec = _pad_to(a, L, 0)
+    return w_stack, b_stack, a_vec
+
+
+def _pad_points(x, block_n):
+    N = x.shape[0]
+    n_pad = ((N + block_n - 1) // block_n) * block_n
+    return _pad_to(_pad_to(x, n_pad, 0), WPAD, 1)
+
+
 @partial(jax.jit, static_argnames=("act", "block_n", "interpret"))
 def pinn_mlp_forward(x, Ws, bs, a, act="tanh", block_n=256, interpret=None):
     """Fused PINN MLP forward + input-Jacobian.
@@ -36,16 +63,85 @@ def pinn_mlp_forward(x, Ws, bs, a, act="tanh", block_n=256, interpret=None):
         interpret = not _on_tpu()
     N, d_in = x.shape
     out_dim = Ws[-1].shape[1]
-    L = len(Ws)
-    # pad weights into a (L, WPAD, WPAD) stack
-    w_stack = jnp.stack([_pad_to(_pad_to(w, WPAD, 0), WPAD, 1) for w in Ws])
-    b_stack = jnp.stack([_pad_to(b, WPAD, 0) for b in bs])
-    a_vec = _pad_to(a, L, 0)
-    n_pad = ((N + block_n - 1) // block_n) * block_n
-    x_pad = _pad_to(_pad_to(x, n_pad, 0), WPAD, 1)
+    w_stack, b_stack, a_vec = pack_mlp(Ws, bs, a)
+    x_pad = _pad_points(x, block_n)
     u, du = pinn_mlp_pallas(x_pad, w_stack, b_stack, a_vec, d_in=d_in, act=act,
                             block_n=block_n, interpret=interpret)
     return u[:N, :out_dim], du[:, :N, :out_dim]
+
+
+@partial(jax.jit, static_argnames=("out_dim", "act", "block_n", "interpret"))
+def pinn_mlp_forward_packed(x, packed, out_dim, act="tanh", block_n=256,
+                            interpret=None):
+    """First-order fused forward on a pre-packed weight stack (see pack_mlp)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, d_in = x.shape
+    w_stack, b_stack, a_vec = packed
+    u, du = pinn_mlp_pallas(_pad_points(x, block_n), w_stack, b_stack, a_vec,
+                            d_in=d_in, act=act, block_n=block_n,
+                            interpret=interpret)
+    return u[:N, :out_dim], du[:, :N, :out_dim]
+
+
+# --------------------------------------------------------------- second order
+#
+# pinn_mlp_forward2 is the production residual path: one fused pass yields
+# (u, du/dx_j, d²u/dx_j²) for all d_in directions.  Dispatch:
+#   * TPU backend            -> compiled Pallas kernel (pinn_mlp._kernel2)
+#   * non-TPU, interpret=None -> ref.pinn_mlp_ref2 (same math, batched jnp —
+#       the compiled CPU fast path; the Pallas interpreter is a correctness
+#       tool, far too slow for production)
+#   * interpret=True         -> Pallas interpreter (kernel validation)
+# The jax.custom_vjp makes the fused outputs differentiable w.r.t. (x, Ws, bs,
+# a): the forward saves ONLY the inputs and the backward recomputes the layer
+# stack via jax.vjp of ref.pinn_mlp_ref2 — i.e. op-granular checkpointing, no
+# activation stash in HBM between forward and backward.
+
+
+def _forward2_impl(x, Ws, bs, a, act, block_n, interpret):
+    N, d_in = x.shape
+    out_dim = Ws[-1].shape[1]
+    if interpret is None:
+        if not _on_tpu():
+            return ref.pinn_mlp_ref2(x, Ws, bs, a, act=act)
+        interpret = False
+    w_stack, b_stack, a_vec = pack_mlp(Ws, bs, a)
+    u, du, d2u = pinn_mlp_pallas2(_pad_points(x, block_n), w_stack, b_stack,
+                                  a_vec, d_in=d_in, act=act, block_n=block_n,
+                                  interpret=interpret)
+    return u[:N, :out_dim], du[:, :N, :out_dim], d2u[:, :N, :out_dim]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _pinn_mlp_forward2(x, Ws, bs, a, act, block_n, interpret):
+    return _forward2_impl(x, Ws, bs, a, act, block_n, interpret)
+
+
+def _pinn_mlp_forward2_fwd(x, Ws, bs, a, act, block_n, interpret):
+    return _forward2_impl(x, Ws, bs, a, act, block_n, interpret), (x, Ws, bs, a)
+
+
+def _pinn_mlp_forward2_bwd(act, block_n, interpret, saved, cts):
+    x, Ws, bs, a = saved
+    _, vjp = jax.vjp(lambda xx, W, b, aa: ref.pinn_mlp_ref2(xx, W, b, aa, act=act),
+                     x, Ws, bs, a)
+    return vjp(cts)
+
+
+_pinn_mlp_forward2.defvjp(_pinn_mlp_forward2_fwd, _pinn_mlp_forward2_bwd)
+
+
+@partial(jax.jit, static_argnames=("act", "block_n", "interpret"))
+def pinn_mlp_forward2(x, Ws, bs, a, act="tanh", block_n=256, interpret=None):
+    """Fused PINN MLP forward + input-Jacobian + diagonal input-Hessian.
+
+    x: (N, d_in); Ws: list[(in,out)]; bs: list[(out,)]; a: (n_hidden,) slopes.
+    Returns (u (N, out), du (d_in, N, out), d2u (d_in, N, out)) with
+    d2u[j] = d²u/dx_j² (diagonal only — what the repo's PDE residuals need).
+    Differentiable w.r.t. (x, Ws, bs, a) via a checkpointed custom VJP.
+    """
+    return _pinn_mlp_forward2(x, tuple(Ws), tuple(bs), a, act, block_n, interpret)
 
 
 @partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))

@@ -1,4 +1,4 @@
-"""Fused PINN-MLP forward + input-Jacobian Pallas TPU kernel.
+"""Fused PINN-MLP forward + input-Jacobian (+ diagonal Hessian) Pallas TPU kernel.
 
 Paper hot-spot (Fig 4): residual-loss evaluation dominates PINN cost.  On TPU, a
 PINN MLP is tiny (width <= ~128) so the naive path is HBM-latency-bound: every
@@ -9,14 +9,23 @@ propagation for all ``d_in`` input directions (tangent rule
 collocation block produces both u and du/dx — the quantities cPINN/XPINN exchange
 at interfaces and the building blocks of flux terms.
 
+The second-order variant additionally carries a forward-over-forward tangent
+``s`` per direction (``s_l = phi''(z)·a²·t² + phi'(z)·a·s`` through each
+activation, then ``s @ W`` through each affine layer), yielding the diagonal
+second derivatives d²u/dx_j² — together with (u, du) everything the Burgers /
+Navier-Stokes / heat-conduction residuals and cPINN fluxes consume, in ONE
+VMEM-resident pass.
+
 Tiling: grid over collocation-point blocks (``block_n`` rows, 8-row sublane
 aligned); weights are padded to (WPAD, WPAD) = (128, 128) lanes — MXU-aligned.
 Adaptive activations (tanh/sin/cos x trainable slope, paper refs [26,27]) are
 selected statically per call.
 
-``ops.pinn_mlp_forward`` is the jit'd wrapper (pads, dispatches, slices);
-``ref.pinn_mlp_ref`` is the pure-jnp oracle; ``tests/test_kernels_pinn_mlp.py``
-sweeps shapes x dtypes x activations in interpret mode.
+``ops.pinn_mlp_forward`` / ``ops.pinn_mlp_forward2`` are the jit'd wrappers
+(pad, dispatch, slice; forward2 adds a ``jax.custom_vjp`` for training);
+``ref.pinn_mlp_ref`` / ``ref.pinn_mlp_ref2`` are the pure-jnp oracles;
+``tests/test_kernels_pinn_mlp.py`` sweeps shapes x dtypes x activations in
+interpret mode against the per-point ``pdes.dir_deriv2`` oracle.
 """
 from __future__ import annotations
 
@@ -37,6 +46,20 @@ def _act_pair(name: str):
         return jnp.sin, jnp.cos
     if name == "cos":
         return jnp.cos, lambda z: -jnp.sin(z)
+    raise ValueError(name)
+
+
+def _act_triple(name: str):
+    """(phi, phi', phi'') for the second-order tangent rule."""
+    if name == "tanh":
+        def d2(z):
+            th = jnp.tanh(z)
+            return -2.0 * th * (1.0 - th * th)
+        return jnp.tanh, lambda z: 1.0 - jnp.tanh(z) ** 2, d2
+    if name == "sin":
+        return jnp.sin, jnp.cos, lambda z: -jnp.sin(z)
+    if name == "cos":
+        return jnp.cos, lambda z: -jnp.sin(z), lambda z: -jnp.cos(z)
     raise ValueError(name)
 
 
@@ -70,6 +93,43 @@ def _kernel(x_ref, w_ref, b_ref, a_ref, u_ref, du_ref, *, n_layers, d_in, act):
         du_ref[j, :, :] = ts[j]
 
 
+def _kernel2(x_ref, w_ref, b_ref, a_ref, u_ref, du_ref, d2u_ref, *, n_layers,
+             d_in, act):
+    """Second-order variant: one block of collocation points.
+
+    Same layout as :func:`_kernel` plus
+
+    d2u_ref: (d_in, block_n, WPAD)   diagonal second derivatives d²u/dx_j²
+
+    Per direction j the kernel carries (t_j, s_j) = (first, second) forward
+    tangents of the running affine output h.  Through an activation
+    ``g = phi(a h)``:  ``t -> phi'(a h)·a·t``,  ``s -> phi''(a h)·a²·t² +
+    phi'(a h)·a·s`` (s BEFORE t is overwritten); through an affine layer both
+    just multiply by W.  s_0 = 0 because the input enters linearly.
+    """
+    phi, dphi, d2phi = _act_triple(act)
+    x = x_ref[...]
+    h = x @ w_ref[0] + b_ref[0][None, :]
+    ts = [jnp.broadcast_to(w_ref[0][j, :][None, :], h.shape) for j in range(d_in)]
+    ss = [jnp.zeros_like(h) for _ in range(d_in)]
+    for l in range(n_layers):
+        a = a_ref[l]
+        z = a * h
+        d1 = dphi(z) * a
+        d2 = d2phi(z) * (a * a)
+        ss = [d2 * t * t + d1 * s for t, s in zip(ts, ss)]
+        ts = [d1 * t for t in ts]
+        h = phi(z)
+        w_next = w_ref[l + 1]
+        ts = [t @ w_next for t in ts]
+        ss = [s @ w_next for s in ss]
+        h = h @ w_next + b_ref[l + 1][None, :]
+    u_ref[...] = h
+    for j in range(d_in):
+        du_ref[j, :, :] = ts[j]
+        d2u_ref[j, :, :] = ss[j]
+
+
 def pinn_mlp_pallas(x_pad, w_stack, b_stack, a_vec, *, d_in, act="tanh",
                     block_n=256, interpret=False):
     """x_pad: (N, WPAD) with N % block_n == 0. Returns (u (N, WPAD), du (d_in, N, WPAD))."""
@@ -93,6 +153,38 @@ def pinn_mlp_pallas(x_pad, w_stack, b_stack, a_vec, *, d_in, act="tanh",
         ],
         out_shape=[
             jax.ShapeDtypeStruct((n, WPAD), x_pad.dtype),
+            jax.ShapeDtypeStruct((d_in, n, WPAD), x_pad.dtype),
+        ],
+        interpret=interpret,
+    )(x_pad, w_stack, b_stack, a_vec)
+
+
+def pinn_mlp_pallas2(x_pad, w_stack, b_stack, a_vec, *, d_in, act="tanh",
+                     block_n=256, interpret=False):
+    """Second-order launch: returns (u (N, WPAD), du (d_in, N, WPAD),
+    d2u (d_in, N, WPAD)) with d2u the DIAGONAL second derivatives."""
+    n, wp = x_pad.shape
+    assert wp == WPAD and n % block_n == 0
+    n_layers = w_stack.shape[0] - 1
+    grid = (n // block_n,)
+    kernel = functools.partial(_kernel2, n_layers=n_layers, d_in=d_in, act=act)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, WPAD), lambda i: (i, 0)),
+            pl.BlockSpec((n_layers + 1, WPAD, WPAD), lambda i: (0, 0, 0)),
+            pl.BlockSpec((n_layers + 1, WPAD), lambda i: (0, 0)),
+            pl.BlockSpec((n_layers + 1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, WPAD), lambda i: (i, 0)),
+            pl.BlockSpec((d_in, block_n, WPAD), lambda i: (0, i, 0)),
+            pl.BlockSpec((d_in, block_n, WPAD), lambda i: (0, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, WPAD), x_pad.dtype),
+            jax.ShapeDtypeStruct((d_in, n, WPAD), x_pad.dtype),
             jax.ShapeDtypeStruct((d_in, n, WPAD), x_pad.dtype),
         ],
         interpret=interpret,

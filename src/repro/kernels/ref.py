@@ -30,6 +30,42 @@ def pinn_mlp_ref(x, Ws, bs, a, act="tanh"):
     return u, jnp.stack(dus, axis=0)
 
 
+def pinn_mlp_ref2(x, Ws, bs, a, act="tanh"):
+    """Reference fused forward + input-Jacobian + DIAGONAL input-Hessian.
+
+    Same math as the second-order Pallas kernel (``pinn_mlp._kernel2``) written
+    as batched jnp — the explicit forward-over-forward tangent recurrence, NOT
+    nested per-point jvp closures.  Triple duty:
+
+    * correctness contract for the kernel (interpret-mode parity tests),
+    * the compiled non-TPU fast path of ``ops.pinn_mlp_forward2``,
+    * the recompute target of the custom VJP (checkpointed backward).
+
+    x: (N, d_in); Ws: sequence of (in, out); bs: sequence of (out,);
+    a: (n_hidden,) adaptive slopes.  Returns (u (N, out), du (d_in, N, out),
+    d2u (d_in, N, out)) where d2u[j] = d²u/dx_j² (no mixed terms).
+    """
+    from repro.kernels.pinn_mlp import _act_triple
+
+    phi, dphi, d2phi = _act_triple(act)
+    d_in = x.shape[1]
+    h = x @ Ws[0] + bs[0]
+    # stack the d_in directions on a leading axis: (d_in, N, width)
+    t = jnp.broadcast_to(Ws[0][:d_in, None, :], (d_in,) + h.shape)
+    s = jnp.zeros_like(t)
+    for l in range(len(Ws) - 1):
+        z = a[l] * h
+        d1 = dphi(z) * a[l]
+        d2 = d2phi(z) * (a[l] * a[l])
+        s = d2[None] * t * t + d1[None] * s
+        t = d1[None] * t
+        h = phi(z)
+        h = h @ Ws[l + 1] + bs[l + 1]
+        t = t @ Ws[l + 1]
+        s = s @ Ws[l + 1]
+    return h, t, s
+
+
 def attention_ref(q, k, v, causal=True):
     """Plain softmax attention oracle. q: (B,H,S,dh); k/v: (B,Hk,T,dh)."""
     B, H, S, dh = q.shape

@@ -12,6 +12,37 @@ import numpy as np
 Pytree = Any
 
 
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, check_vma: bool = True):
+    """Version-compat ``shard_map``: jax >= 0.5 exposes ``jax.shard_map`` with
+    ``check_vma``; 0.4.x has ``jax.experimental.shard_map.shard_map`` with the
+    older ``check_rep`` spelling.  ``mesh=None`` resolves the active mesh
+    context (``utils.set_mesh`` / ``with mesh:``).  One call site, both APIs."""
+    if hasattr(jax, "shard_map"):
+        kw = {} if mesh is None else {"mesh": mesh}
+        return jax.shard_map(f, in_specs=in_specs, out_specs=out_specs,
+                             check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    if mesh is None:
+        from jax._src.mesh import thread_resources
+
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            raise ValueError("shard_map with mesh=None needs an active mesh "
+                             "context (utils.set_mesh)")
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def set_mesh(mesh):
+    """Version-compat mesh activation: ``jax.set_mesh`` (>= 0.6) or the Mesh
+    context manager (0.4.x), under which ``with_sharding_constraint`` accepts
+    bare PartitionSpecs.  Use as ``with utils.set_mesh(mesh): ...``."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def tree_stack(trees: list[Pytree]) -> Pytree:
     """Stack a list of identically-structured pytrees along a new leading axis."""
     return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)

@@ -1,6 +1,7 @@
 """Decomposition + topology invariants (paper Fig 3), incl. hypothesis properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # container may lack hypothesis; skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core.domain import (

@@ -116,3 +116,55 @@ def test_heat_flux_is_K_grad_T():
     K = u_fn(x)[1]
     gT = jax.jacfwd(lambda y: u_fn(y)[0])(x)
     np.testing.assert_allclose(fl, K * gT, rtol=1e-5)
+
+
+# ------------------- batched derivative-bundle interface (fused-kernel path)
+
+def _bundle_of(u_fn, x):
+    """(u, du, d2u) of a closure via the per-point jvp oracle, batched."""
+    from repro.core.pdes import dir_deriv, dir_deriv2
+
+    dim = x.shape[1]
+    u = jax.vmap(u_fn)(x)
+    basis = [jnp.zeros((dim,)).at[j].set(1.0) for j in range(dim)]
+    du = jnp.stack([jax.vmap(lambda xi, e=e: dir_deriv(u_fn, xi, e))(x) for e in basis])
+    d2u = jnp.stack([jax.vmap(lambda xi, e=e: dir_deriv2(u_fn, xi, e))(x) for e in basis])
+    return u, du, d2u
+
+
+@pytest.mark.parametrize("pde,n_out,lo,hi", [
+    (Burgers1D(), 1, -1.0, 1.0),
+    (NavierStokes2D(), 3, 0.1, 0.9),
+    (HeatConduction2D(), 2, 0.0, 2.0),
+])
+def test_residual_and_flux_from_derivs_match_closures(pde, n_out, lo, hi):
+    """residual_from_derivs / flux_from_derivs on the jvp bundle == the
+    per-point closure forms — the contract the fused kernel plugs into."""
+    rng = np.random.default_rng(7)
+    u_fn = _random_net(rng, n_out)
+    x = jnp.asarray(rng.uniform(lo, hi, (16, 2)), jnp.float32)
+    u, du, d2u = _bundle_of(u_fn, x)
+    r_b = pde.residual_from_derivs(x, u, du, d2u)
+    r_c = jax.vmap(lambda xi: pde.residual(u_fn, xi))(x)
+    np.testing.assert_allclose(r_b, r_c, rtol=1e-5, atol=1e-6)
+    f_b = pde.flux_from_derivs(x, u, du)
+    f_c = jax.vmap(lambda xi: pde.flux(u_fn, xi))(x)
+    np.testing.assert_allclose(f_b, f_c, rtol=1e-5, atol=1e-6)
+
+
+def test_euler_residual_from_derivs_matches_closure():
+    from repro.core.pdes import Euler1D
+
+    pde = Euler1D()
+    rng = np.random.default_rng(8)
+    W = jnp.asarray(rng.normal(0, 0.3, (2, 12)), jnp.float32)
+    W2 = jnp.asarray(rng.normal(0, 0.3, (12, 3)), jnp.float32)
+    u_fn = lambda x: jnp.tanh(x @ W) @ W2 + jnp.array([1.5, 0.2, 2.0])  # rho>0
+    x = jnp.asarray(rng.uniform(0.2, 0.8, (12, 2)), jnp.float32)
+    u, du, d2u = _bundle_of(u_fn, x)
+    r_b = pde.residual_from_derivs(x, u, du, d2u)
+    r_c = jax.vmap(lambda xi: pde.residual(u_fn, xi))(x)
+    np.testing.assert_allclose(r_b, r_c, rtol=1e-4, atol=1e-5)
+    f_b = pde.flux_from_derivs(x, u, du)
+    f_c = jax.vmap(lambda xi: pde.flux(u_fn, xi))(x)
+    np.testing.assert_allclose(f_b, f_c, rtol=1e-5, atol=1e-6)
