@@ -11,6 +11,11 @@ fused pass for u / du / d²u instead of per-point jvp closures under vmap; on
 non-TPU backends this compiles the batched jnp recurrence, on TPU the Pallas
 kernel) and writes ``BENCH_residual.json`` at the repo root with both timings
 per configuration.
+
+``--e2e`` times WHOLE training steps on the quickstart workload (2x2 Burgers
+XPINN) instead of isolated loss phases: the per-step jit loop vs the scanned
+single-dispatch ``run_chunk`` driver, on both residual paths, and writes
+``BENCH_step.json`` at the repo root (steps/s + dispatch/entry counts).
 """
 from __future__ import annotations
 
@@ -40,6 +45,7 @@ from repro.utils import time_fn
 from benchmarks.common import REPO, emit
 
 BENCH_JSON = os.path.join(REPO, "BENCH_residual.json")
+BENCH_STEP_JSON = os.path.join(REPO, "BENCH_step.json")
 
 
 def _phases(pde, cfg, params, batch, res_path: ResidualPath | None = None):
@@ -124,6 +130,101 @@ def run(iters: int = 10, path: str = "jvp", smoke: bool = False):
     return rows
 
 
+def run_e2e(iters: int = 3, smoke: bool = False):
+    """Whole-step timing: per-step jit loop vs the scanned run_chunk driver.
+
+    The quickstart workload (2x2 space-time Burgers XPINN).  Per residual path
+    ("jvp" oracle / "pallas" fused megabatch) measures steps/s for (a) a Python
+    loop of ``trainer.step`` — one jit dispatch and, pre-megabatch, 4 network
+    entries per step (the PR-1 dispatch pattern) — and (b) one
+    ``trainer.run_chunk`` dispatch per chunk.  Writes BENCH_step.json.
+    """
+    import time
+
+    from repro.core import (Burgers1D as _B, CartesianDecomposition, DDConfig,
+                            ReferenceTrainer, XPINN, build_topology)
+    from repro.data import make_batch
+
+    pde = _B()
+    n_res, steps = (250, 20) if smoke else (1000, 100)
+    dec = CartesianDecomposition(((-1, 1), (0, 1)), 2, 2)
+    topo = build_topology(dec, n_iface=20)
+    cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 24, 4)})
+    batch = make_batch(dec, topo, pde, n_res=n_res, n_bnd=80,
+                       rng=np.random.default_rng(0))
+    b = batch.device_arrays()
+
+    rows, records = [], {}
+    for path in ("jvp", "pallas"):
+        tr = ReferenceTrainer(pde, cfg, topo,
+                              DDConfig(method=XPINN, residual_path=path), lrs=2e-3)
+
+        def loop_once():
+            st = tr.init(0)
+            for _ in range(steps):
+                st, terms = tr.step(st, b)
+            jax.block_until_ready(terms["loss"])
+
+        def chunk_once():
+            st = tr.init(0)
+            st, terms = tr.run_chunk(st, b, steps)
+            jax.block_until_ready(terms["loss"])
+
+        timings = {}
+        for tag, fn in (("loop", loop_once), ("chunk", chunk_once)):
+            fn()  # compile
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                fn()
+                ts.append(time.perf_counter() - t0)
+            timings[tag] = steps / float(np.median(ts))
+            rows.append((f"fig4/e2e/{path}/{tag}_steps_per_s",
+                         round(timings[tag], 2), "it/s"))
+        rows.append((f"fig4/e2e/{path}/chunk_speedup",
+                     round(timings["chunk"] / timings["loop"], 2), "x"))
+        records[path] = {"loop_it_s": round(timings["loop"], 2),
+                         "chunk_it_s": round(timings["chunk"], 2),
+                         "speedup": round(timings["chunk"] / timings["loop"], 3)}
+
+    quickstart = None
+    if not smoke:
+        # the acceptance workload: examples/quickstart.py --steps 500 end to
+        # end (training + periodic eval), parsed from its own report
+        import re
+        import subprocess
+        res = subprocess.run(
+            [sys.executable, os.path.join(REPO, "examples", "quickstart.py"),
+             "--steps", "500"],
+            capture_output=True, text=True, timeout=1200)
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"quickstart acceptance run failed (rc={res.returncode}):\n"
+                f"{res.stderr[-2000:]}")
+        m = re.findall(r"step\s+500.*\((\d+\.?\d*) it/s\)", res.stdout)
+        if not m:
+            raise RuntimeError(
+                f"no step-500 rate in quickstart output:\n{res.stdout[-2000:]}")
+        quickstart = float(m[-1])
+        rows.append(("fig4/e2e/quickstart_500_steps_per_s", quickstart, "it/s"))
+
+    out = BENCH_STEP_JSON.replace(".json", "_smoke.json") if smoke else BENCH_STEP_JSON
+    with open(out, "w") as f:
+        json.dump({
+            "workload": f"quickstart 2x2 Burgers XPINN, n_res={n_res}, "
+                        f"chunk={steps} steps",
+            "backend": jax.default_backend(), "iters": iters,
+            "paths": records,
+            "quickstart_500_it_s": quickstart,
+            # static dispatch accounting (see EXPERIMENTS.md §Step fusion)
+            "entries_per_loss_eval": {"pre_megabatch": 3, "megabatch": 1},
+            "entries_per_step": {"pre_megabatch": 4, "megabatch": 1},
+            "dispatches_per_100_steps": {"loop": 100, "chunk": round(100 / steps, 2)},
+        }, f, indent=1)
+    print(f"wrote {out}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--path", choices=("jvp", "pallas"), default="jvp",
@@ -131,7 +232,13 @@ def main():
                          "fused kernel (also times jvp for the comparison)")
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--smoke", action="store_true", help="single tiny config")
+    ap.add_argument("--e2e", action="store_true",
+                    help="time whole run_chunk training steps (loop vs scan) "
+                         "and write BENCH_step.json")
     args = ap.parse_args()
+    if args.e2e:
+        emit(run_e2e(iters=max(1, args.iters // 3), smoke=args.smoke))
+        return
     emit(run(iters=args.iters, path=args.path, smoke=args.smoke))
 
 

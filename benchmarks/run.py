@@ -26,7 +26,8 @@ def main() -> None:
                     help="comma list: fig4,fig6,fig8,fig9,table2,fig13,roofline")
     ap.add_argument("--quick", action="store_true", help="fewer sizes/iters")
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-fast subset: tiny fig4 jvp-vs-pallas + roofline")
+                    help="seconds-fast subset: tiny fig4 jvp-vs-pallas + "
+                         "run_chunk e2e + roofline")
     args = ap.parse_args()
 
     from benchmarks import (fig4_cost_profile, fig6_comp_comm, fig8_weak_scaling,
@@ -35,6 +36,7 @@ def main() -> None:
 
     if args.smoke:
         rows = fig4_cost_profile.run(iters=3, path="pallas", smoke=True)
+        rows += fig4_cost_profile.run_e2e(iters=1, smoke=True)
         rows += roofline.residual_rows("both")
         emit(rows)
         return

@@ -32,6 +32,8 @@ def main():
     ap.add_argument("--steps", type=int, default=2000)
     ap.add_argument("--balance", action="store_true",
                     help="equalize per-region residual points (straggler fix)")
+    ap.add_argument("--chunk", type=int, default=250,
+                    help="outer steps per device dispatch (lax.scan driver)")
     args = ap.parse_args()
 
     pde = HeatConduction2D()
@@ -55,13 +57,16 @@ def main():
     b = batch.device_arrays()
 
     t0 = time.time()
-    for s in range(args.steps):
-        state, terms = trainer.step(state, b)
-        if (s + 1) % 250 == 0:
-            loss = float(np.asarray(terms["loss"]).sum())
+    done = 0
+    while done < args.steps:
+        n = min(max(args.chunk, 1), args.steps - done, 250 - done % 250)
+        state, terms = trainer.run_chunk(state, b, n)
+        done += n
+        if done % 250 == 0 or done == args.steps:
+            loss = float(np.asarray(terms["loss"])[-1].sum())
             err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
-            print(f"[inverse] step {s+1:5d} loss={loss:9.4f} rel_L2(T,K)={err:.4f} "
-                  f"({(s+1)/(time.time()-t0):.1f} it/s)")
+            print(f"[inverse] step {done:5d} loss={loss:9.4f} rel_L2(T,K)={err:.4f} "
+                  f"({done/(time.time()-t0):.1f} it/s)")
 
     err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
     print(f"[inverse] final rel L2 error (T, K stacked) vs exact: {err:.4f}")

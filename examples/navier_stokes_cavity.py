@@ -33,6 +33,8 @@ GHIA_U = np.array([-0.0372, -0.1015, -0.1566, -0.2109, -0.2058, -0.1364, 0.0033,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=4000)
+    ap.add_argument("--chunk", type=int, default=500,
+                    help="outer steps per device dispatch (lax.scan driver)")
     args = ap.parse_args()
 
     pde = NavierStokes2D(re=100.0)
@@ -49,12 +51,15 @@ def main():
     b = batch.device_arrays()
 
     t0 = time.time()
-    for s in range(args.steps):
-        state, terms = trainer.step(state, b)
-        if (s + 1) % 500 == 0:
-            loss = float(np.asarray(terms["loss"]).sum())
-            print(f"[cavity] step {s+1:5d} loss={loss:9.5f} "
-                  f"({(s+1)/(time.time()-t0):.1f} it/s)")
+    done = 0
+    while done < args.steps:
+        n = min(max(args.chunk, 1), args.steps - done, 500 - done % 500)
+        state, terms = trainer.run_chunk(state, b, n)
+        done += n
+        if done % 500 == 0 or done == args.steps:
+            loss = float(np.asarray(terms["loss"])[-1].sum())
+            print(f"[cavity] step {done:5d} loss={loss:9.5f} "
+                  f"({done/(time.time()-t0):.1f} it/s)")
 
     # stitched centerline profile (eq. 4) vs Ghia reference
     pts = np.stack([np.full_like(GHIA_Y, 0.5), GHIA_Y], axis=1).astype(np.float32)

@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--path", choices=("jvp", "pallas"), default="pallas",
                     help="residual evaluation: fused kernel (default) or the "
                          "per-point jvp oracle")
+    ap.add_argument("--chunk", type=int, default=250,
+                    help="outer steps per device dispatch (lax.scan driver); "
+                         "1 falls back to the per-step jit loop")
     args = ap.parse_args()
 
     pde = Burgers1D()
@@ -49,14 +52,25 @@ def main():
     state = trainer.init(0)
     b = batch.device_arrays()
 
+    report_every = 250
     t0 = time.time()
-    for s in range(args.steps):
-        state, terms = trainer.step(state, b)
-        if (s + 1) % 250 == 0:
-            loss = float(np.asarray(terms["loss"]).sum())
+    done = 0
+    while done < args.steps:
+        # align chunk boundaries with the report cadence so each distinct
+        # chunk length compiles once
+        n = min(max(args.chunk, 1), args.steps - done,
+                report_every - done % report_every)
+        if args.chunk <= 1:
+            state, terms = trainer.step(state, b)
+            n, last_loss = 1, float(np.asarray(terms["loss"]).sum())
+        else:
+            state, terms = trainer.run_chunk(state, b, n)
+            last_loss = float(np.asarray(terms["loss"])[-1].sum())
+        done += n
+        if done % report_every == 0 or done == args.steps:
             err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
-            print(f"[quickstart] step {s+1:5d} loss={loss:8.4f} rel_L2={err:.4f} "
-                  f"({(s+1)/(time.time()-t0):.1f} it/s)")
+            print(f"[quickstart] step {done:5d} loss={last_loss:8.4f} rel_L2={err:.4f} "
+                  f"({done/(time.time()-t0):.1f} it/s)")
 
     err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
     print(f"[quickstart] final rel L2 error vs Cole-Hopf exact: {err:.4f}")

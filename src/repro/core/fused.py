@@ -41,6 +41,18 @@ def uniform_act_name(act_codes) -> str | None:
     return names[0] if len(set(names)) == 1 else None
 
 
+def _fold_net(c, p, width_mask, dtype):
+    """Fold adaptive slopes + width masks into a plain (Ws, bs, a) stack."""
+    Ws, bs = list(p["W"]), list(p["b"])
+    if c.adaptive:
+        a = c.slope_scale * p["a"]
+    else:
+        a = jnp.full((c.depth,), c.slope_scale, dtype)
+    if width_mask is not None:
+        Ws = [Ws[0]] + [width_mask[:, None] * w for w in Ws[1:]]
+    return Ws, bs, a
+
+
 def model_bundle(
     cfg: SubdomainModelConfig,
     params: dict,
@@ -49,6 +61,7 @@ def model_bundle(
     width_masks: dict | None = None,
     block_n: int = 256,
     interpret: bool | None = None,
+    d2_dirs: tuple | None = None,
 ):
     """Fused (u, du, d2u) for the full multi-net subdomain model.
 
@@ -56,21 +69,42 @@ def model_bundle(
     d2u the diagonal second derivatives, differentiable w.r.t. params via the
     kernel's custom VJP.
     """
-    us, dus, d2us = [], [], []
+    (bundle,) = model_bundle_segments(cfg, params, (x,), act, width_masks,
+                                      block_n, interpret, d2_dirs)
+    return bundle
+
+
+def model_bundle_segments(
+    cfg: SubdomainModelConfig,
+    params: dict,
+    x_segs,                  # sequence of (n_i, dim)
+    act: str,
+    width_masks: dict | None = None,
+    block_n: int = 256,
+    interpret: bool | None = None,
+    d2_dirs: tuple | None = None,
+):
+    """Megabatched fused bundles: ONE kernel entry per field net for ALL point
+    segments of a training step (residual + interface + data points).
+
+    Returns a tuple of per-segment (u, du, d2u) bundles with field outputs
+    concatenated exactly like :func:`model_bundle`.  Because the kernel math is
+    row-independent, each segment's bundle equals a separate ``model_bundle``
+    call on that segment alone — this only collapses len(x_segs) network
+    entries (pack + launch + custom-VJP backward each) into one per net.
+    """
+    per_seg = [[] for _ in x_segs]
+    dtype = x_segs[0].dtype
     for name, c in cfg.nets.items():
-        p = params[name]
-        Ws, bs = list(p["W"]), list(p["b"])
-        if c.adaptive:
-            a = c.slope_scale * p["a"]
-        else:
-            a = jnp.full((c.depth,), c.slope_scale, x.dtype)
         wm = None if width_masks is None else width_masks.get(name)
-        if wm is not None:
-            Ws = [Ws[0]] + [wm[:, None] * w for w in Ws[1:]]
-        u, du, d2u = ops.pinn_mlp_forward2(x, Ws, bs, a, act=act,
-                                           block_n=block_n, interpret=interpret)
-        us.append(u)
-        dus.append(du)
-        d2us.append(d2u)
-    return (jnp.concatenate(us, axis=-1), jnp.concatenate(dus, axis=-1),
-            jnp.concatenate(d2us, axis=-1))
+        Ws, bs, a = _fold_net(c, params[name], wm, dtype)
+        bundles = ops.pinn_mlp_forward2_segments(x_segs, Ws, bs, a, act=act,
+                                                 block_n=block_n,
+                                                 interpret=interpret,
+                                                 d2_dirs=d2_dirs)
+        for segs, b in zip(per_seg, bundles):
+            segs.append(b)
+    return tuple(
+        tuple(jnp.concatenate([b[i] for b in segs], axis=-1) for i in range(3))
+        for segs in per_seg
+    )

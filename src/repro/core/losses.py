@@ -83,7 +83,8 @@ def residual_eval(pde: PDE, cfg, params, act_code, width_masks, pts, path):
     given, per-point jvp closures otherwise."""
     if path is not None:
         u, du, d2u = fused.model_bundle(cfg, params, pts, path.act, width_masks,
-                                        path.block_n, path.interpret)
+                                        path.block_n, path.interpret,
+                                        d2_dirs=pde.d2_dirs)
         return pde.residual_from_derivs(pts, u, du, d2u)
     u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
     return jax.vmap(lambda x: pde.residual(u_fn, x))(pts)
@@ -103,7 +104,8 @@ def interface_payload(
         # VJP (training differentiates the payload), and interface points are
         # O(K * n_iface) — tiny next to the residual set that needs d2u anyway.
         ub, dub, d2ub = fused.model_bundle(cfg, params, flat, path.act,
-                                           width_masks, path.block_n, path.interpret)
+                                           width_masks, path.block_n,
+                                           path.interpret, d2_dirs=pde.d2_dirs)
         u = ub.reshape(K, nI, pde.n_fields)
         if method == CPINN:
             g = pde.flux_from_derivs(flat, ub, dub).reshape(K, nI, pde.n_eq, dim)
@@ -133,35 +135,74 @@ def payload_dot_normal(payload: dict, iface_nrm: jax.Array, method: int) -> dict
     return payload
 
 
-def subdomain_loss(
-    pde: PDE, cfg, method: int, weights: LossWeights,
-    params, act_code, width_masks,
+def network_eval(
+    pde: PDE, cfg, method: int, params, act_code, width_masks,
+    batch: SubBatch, path: ResidualPath | None,
+) -> tuple[jax.Array, dict, jax.Array]:
+    """Every network-dependent quantity of one training step, in ONE entry.
+
+    Returns (res (n_res, n_eq), own payload {u, g} already normal-projected,
+    data_pred (n_data, n_fields)).
+
+    Fused path (``path`` given): residual, interface, and data points are
+    concatenated into one megabatch with a STATIC segment layout
+    ``[res | iface(K*nI) | data]`` and the network is entered once per field
+    net (:func:`fused.model_bundle_segments`); residuals / fluxes / payloads
+    are assembled from the sliced bundle without re-entering the network.
+    jvp path (``path=None``): the per-point closure oracle, unchanged
+    (paper §4.1) — three separate vmapped entries, kept as the correctness
+    reference.
+    """
+    K, nI, dim = batch.iface_pts.shape
+    iface_flat = batch.iface_pts.reshape(K * nI, dim)
+    if path is not None:
+        res_b, iface_b, data_b = fused.model_bundle_segments(
+            cfg, params, (batch.res_pts, iface_flat, batch.data_pts), path.act,
+            width_masks, path.block_n, path.interpret, d2_dirs=pde.d2_dirs)
+        res = pde.residual_from_derivs(batch.res_pts, *res_b)
+        ub, dub, d2ub = iface_b
+        u = ub.reshape(K, nI, pde.n_fields)
+        if method == CPINN:
+            g = pde.flux_from_derivs(iface_flat, ub, dub).reshape(
+                K, nI, pde.n_eq, dim)
+        else:
+            g = pde.residual_from_derivs(iface_flat, ub, dub, d2ub).reshape(
+                K, nI, pde.n_eq)
+        own = {"u": u, "g": g}
+        data_pred = data_b[0]
+    else:
+        u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
+        res = jax.vmap(lambda x: pde.residual(u_fn, x))(batch.res_pts)
+        own = interface_payload(pde, cfg, method, params, act_code, width_masks,
+                                batch.iface_pts, path=None)
+        data_pred = jax.vmap(u_fn)(batch.data_pts)
+    return res, payload_dot_normal(own, batch.iface_nrm, method), data_pred
+
+
+def assemble_subdomain_loss(
+    pde: PDE, method: int, weights: LossWeights,
     batch: SubBatch,
-    recv_u: jax.Array,   # (K, n_iface, n_fields) neighbor u at shared points
-    recv_g: jax.Array,   # (K, n_iface, n_eq)     neighbor f.n_nbr (cPINN) or F (XPINN)
-    own: dict | None = None,  # precomputed normal-projected interface payload
-    path: ResidualPath | None = None,  # fused-kernel dispatch (None: jvp oracle)
+    res: jax.Array,       # (n_res, n_eq) precomputed PDE residuals
+    own: dict,            # normal-projected own payload {u, g}
+    data_pred: jax.Array,  # (n_data, n_fields)
+    recv_u: jax.Array, recv_g: jax.Array,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
-    """Eq. (5) (cPINN) or eq. (6) (XPINN) for one subdomain."""
-    u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
+    """Eq. (5)/(6) arithmetic from precomputed network outputs — pure masking /
+    reduction, no network entry.  The trainers differentiate this w.r.t.
+    (res, own, data_pred) and chain through the single fused entry's VJP."""
     K, nI, dim = batch.iface_pts.shape
 
     # --- MSE_u: data / boundary mismatch ------------------------------------
-    pred = jax.vmap(u_fn)(batch.data_pts)                     # (n_data, F)
     w = batch.data_comp * batch.data_mask[:, None]
-    mse_data = jnp.sum(w * (pred - batch.data_vals) ** 2) / jnp.maximum(jnp.sum(w), 1.0)
+    mse_data = jnp.sum(w * (data_pred - batch.data_vals) ** 2) / jnp.maximum(
+        jnp.sum(w), 1.0)
 
     # --- MSE_F: PDE residual --------------------------------------------------
-    res = residual_eval(pde, cfg, params, act_code, width_masks, batch.res_pts, path)
     mse_res = jnp.sum(batch.res_mask[:, None] * res**2) / jnp.maximum(
         jnp.sum(batch.res_mask) * pde.n_eq, 1.0
     )
 
     # --- interface terms -----------------------------------------------------
-    if own is None:
-        own = interface_payload(pde, cfg, method, params, act_code, width_masks,
-                                batch.iface_pts, path)
-        own = payload_dot_normal(own, batch.iface_nrm, method)
     em = batch.edge_mask[:, None, None]
 
     # MSE_u_avg: |u_q - {{u}}|^2 = |(u_q - u_nbr)/2|^2, summed over neighbors q+
@@ -186,16 +227,55 @@ def subdomain_loss(
     return total, terms
 
 
+def subdomain_loss(
+    pde: PDE, cfg, method: int, weights: LossWeights,
+    params, act_code, width_masks,
+    batch: SubBatch,
+    recv_u: jax.Array,   # (K, n_iface, n_fields) neighbor u at shared points
+    recv_g: jax.Array,   # (K, n_iface, n_eq)     neighbor f.n_nbr (cPINN) or F (XPINN)
+    own: dict | None = None,  # precomputed normal-projected interface payload
+    path: ResidualPath | None = None,  # fused-kernel dispatch (None: jvp oracle)
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Eq. (5) (cPINN) or eq. (6) (XPINN) for one subdomain.
+
+    Convenience entry point (tests / external callers).  When ``own`` is
+    precomputed it re-enters the network separately for data + residual
+    evaluation; the trainers instead use :func:`network_eval` +
+    :func:`assemble_subdomain_loss` for the single-entry hot path.
+    """
+    if own is None:
+        res, own, data_pred = network_eval(pde, cfg, method, params, act_code,
+                                           width_masks, batch, path)
+    else:
+        u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
+        data_pred = jax.vmap(u_fn)(batch.data_pts)
+        res = residual_eval(pde, cfg, params, act_code, width_masks,
+                            batch.res_pts, path)
+    return assemble_subdomain_loss(pde, method, weights, batch, res, own,
+                                   data_pred, recv_u, recv_g)
+
+
 def vanilla_pinn_loss(
     pde: PDE, cfg, weights: LossWeights, params, act_code, width_masks,
     batch: SubBatch, path: ResidualPath | None = None,
 ) -> tuple[jax.Array, dict[str, jax.Array]]:
-    """Eq. (3): the single-domain PINN loss (data-parallel baseline, Fig 1a)."""
-    u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
-    pred = jax.vmap(u_fn)(batch.data_pts)
+    """Eq. (3): the single-domain PINN loss (data-parallel baseline, Fig 1a).
+
+    Fused path: residual + data points form one ``[res | data]`` megabatch —
+    a single network entry per field net, same consolidation as
+    :func:`network_eval`."""
+    if path is not None:
+        res_b, data_b = fused.model_bundle_segments(
+            cfg, params, (batch.res_pts, batch.data_pts), path.act,
+            width_masks, path.block_n, path.interpret, d2_dirs=pde.d2_dirs)
+        res = pde.residual_from_derivs(batch.res_pts, *res_b)
+        pred = data_b[0]
+    else:
+        u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
+        pred = jax.vmap(u_fn)(batch.data_pts)
+        res = jax.vmap(lambda x: pde.residual(u_fn, x))(batch.res_pts)
     w = batch.data_comp * batch.data_mask[:, None]
     mse_data = jnp.sum(w * (pred - batch.data_vals) ** 2) / jnp.maximum(jnp.sum(w), 1.0)
-    res = residual_eval(pde, cfg, params, act_code, width_masks, batch.res_pts, path)
     mse_res = jnp.sum(batch.res_mask[:, None] * res**2) / jnp.maximum(
         jnp.sum(batch.res_mask) * pde.n_eq, 1.0
     )

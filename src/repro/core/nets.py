@@ -37,6 +37,11 @@ def act_name(code: int | str) -> str:
     return {v: k for k, v in _ACT_NAMES.items()}[int(code)]
 
 
+def act_code(name: str | int) -> int:
+    """Canonical name/code -> concrete activation code (inverse of act_name)."""
+    return _ACT_NAMES[act_name(name)]
+
+
 def activation(z: jax.Array, code: jax.Array) -> jax.Array:
     """Branchless per-subdomain activation select (code is a traced scalar)."""
     return jnp.where(code == ACT_TANH, jnp.tanh(z),
@@ -51,6 +56,8 @@ class MLPConfig:
     depth: int  # number of HIDDEN layers (paper's "L hidden layers")
     adaptive: bool = True          # trainable slope a (ref [26]); a=1 frozen otherwise
     slope_scale: float = 1.0       # paper's scaled slope n*a uses a fixed scale n
+    act: str = "tanh"              # model-declared activation (per-subdomain
+                                   # act_codes override it in the DD trainers)
 
     @property
     def layer_dims(self) -> list[tuple[int, int]]:
@@ -111,6 +118,24 @@ class SubdomainModelConfig:
         return out
 
 
+def uniform_model_act(cfg: SubdomainModelConfig) -> str:
+    """The single activation declared by ALL field nets of a model config.
+
+    `model_apply` evaluates every field net with one activation code, so a
+    config whose nets declare different activations is genuinely unsupported —
+    that (and an unknown name) are the only error cases.
+    """
+    acts = {c.act for c in cfg.nets.values()}
+    if len(acts) != 1:
+        raise ValueError(
+            f"field nets declare mixed activations {sorted(acts)}; model_apply "
+            "evaluates all nets with one activation code")
+    (act,) = acts
+    if act not in _ACT_NAMES:
+        raise ValueError(f"unknown activation {act!r}")
+    return act
+
+
 def init_model(cfg: SubdomainModelConfig, rng: jax.Array) -> dict:
     keys = jax.random.split(rng, len(cfg.nets))
     return {name: init_mlp(c, k) for (name, c), k in zip(cfg.nets.items(), keys)}
@@ -140,7 +165,7 @@ def stacked_init(
     keys = jax.random.split(rng, n_sub)
     params = jax.vmap(lambda k: init_model(cfg, k))(keys)
     if act_codes is None:
-        codes = np.zeros((n_sub,), np.int32)
+        codes = np.full((n_sub,), _ACT_NAMES[uniform_model_act(cfg)], np.int32)
     else:
         codes = np.array(
             [_ACT_NAMES[c] if isinstance(c, str) else int(c) for c in act_codes],

@@ -69,6 +69,13 @@ class PDE:
     # Laplacian-form — no mixed partials).  A PDE that leaves these unimplemented
     # simply falls back to the per-point jvp closures above.
 
+    # Directions whose SECOND derivative the residual actually consumes
+    # (None = all).  The bundle evaluators prune the second-order tangent
+    # stream to these directions — e.g. Burgers needs u_xx but never u_tt, and
+    # first-order systems (Euler) need no d2u at all; unpruned rows of the
+    # returned d2u are exact zeros.
+    d2_dirs: tuple[int, ...] | None = None
+
     def residual_from_derivs(self, x: jax.Array, u: jax.Array, du: jax.Array,
                              d2u: jax.Array) -> jax.Array:  # (n, n_eq)
         raise NotImplementedError
@@ -108,6 +115,7 @@ class Burgers1D(PDE):
     input_dim: int = 2
     n_fields: int = 1
     n_eq: int = 1
+    d2_dirs = (0,)  # u_xx only — no second time derivative in the residual
 
     def residual(self, u_fn: Fn, x: jax.Array) -> jax.Array:
         ex, et = _basis(2, 0), _basis(2, 1)
@@ -329,6 +337,7 @@ class Euler1D(PDE):
     input_dim: int = 2
     n_fields: int = 3
     n_eq: int = 3
+    d2_dirs = ()  # first-order system: the bundle's d2u is never consumed
 
     def _primitive(self, U):
         rho = U[0]

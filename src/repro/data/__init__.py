@@ -1,1 +1,2 @@
-from repro.data.points import StackedBatch, make_batch, make_vanilla_batch
+from repro.data.points import (StackedBatch, make_batch, make_vanilla_batch,
+                               stack_batches)

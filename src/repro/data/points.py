@@ -10,6 +10,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -112,6 +113,17 @@ def make_batch(
         iface_nrm=topo.iface_normal.astype(np.float32),
         edge_mask=topo.edge_mask.astype(np.float32),
     )
+
+
+def stack_batches(batches: Sequence[SubBatch]) -> SubBatch:
+    """Stack per-step SubBatches along a NEW leading chunk axis.
+
+    The result feeds ``trainer.run_chunk(state, stacked)`` (steps=None): the
+    scanned epoch driver consumes one batch per outer step — e.g. freshly
+    resampled collocation points — while still compiling to a single dispatch.
+    All batches must share the padded layout (same point counts).
+    """
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *batches)
 
 
 def make_vanilla_batch(

@@ -6,4 +6,5 @@ pinn_mlp        — fused PINN MLP forward + input-Jacobian (+ second-order
 flash_attention — causal GQA flash attention (32k-prefill roofline hot spot).
 """
 from repro.kernels.ops import (flash_attention, pack_mlp, pinn_mlp_forward,
-                               pinn_mlp_forward2, pinn_mlp_forward_packed)
+                               pinn_mlp_forward2, pinn_mlp_forward2_segments,
+                               pinn_mlp_forward_packed)

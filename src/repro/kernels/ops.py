@@ -99,49 +99,100 @@ def pinn_mlp_forward_packed(x, packed, out_dim, act="tanh", block_n=256,
 # activation stash in HBM between forward and backward.
 
 
-def _forward2_impl(x, Ws, bs, a, act, block_n, interpret):
+def _zero_pruned_rows(d2u, d2_dirs, d_in):
+    """Zero d2u rows outside d2_dirs (kernel path parity with the pruned ref)."""
+    if d2_dirs is None or tuple(d2_dirs) == tuple(range(d_in)):
+        return d2u
+    mask = np.zeros((d_in, 1, 1), d2u.dtype)
+    for j in d2_dirs:
+        mask[j] = 1.0
+    return d2u * mask
+
+
+def _forward2_impl(x, Ws, bs, a, act, block_n, interpret, d2_dirs):
     N, d_in = x.shape
     out_dim = Ws[-1].shape[1]
     if interpret is None:
         if not _on_tpu():
-            return ref.pinn_mlp_ref2(x, Ws, bs, a, act=act)
+            return ref.pinn_mlp_ref2(x, Ws, bs, a, act=act, d2_dirs=d2_dirs)
         interpret = False
     w_stack, b_stack, a_vec = pack_mlp(Ws, bs, a)
     u, du, d2u = pinn_mlp_pallas2(_pad_points(x, block_n), w_stack, b_stack,
                                   a_vec, d_in=d_in, act=act, block_n=block_n,
                                   interpret=interpret)
+    # the VMEM-resident kernel computes every direction (pruning buys nothing
+    # there); zero the unused rows so every dispatch path agrees with the ref
+    d2u = _zero_pruned_rows(d2u, d2_dirs, d_in)
     return u[:N, :out_dim], du[:, :N, :out_dim], d2u[:, :N, :out_dim]
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
-def _pinn_mlp_forward2(x, Ws, bs, a, act, block_n, interpret):
-    return _forward2_impl(x, Ws, bs, a, act, block_n, interpret)
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _pinn_mlp_forward2(x, Ws, bs, a, act, block_n, interpret, d2_dirs):
+    return _forward2_impl(x, Ws, bs, a, act, block_n, interpret, d2_dirs)
 
 
-def _pinn_mlp_forward2_fwd(x, Ws, bs, a, act, block_n, interpret):
-    return _forward2_impl(x, Ws, bs, a, act, block_n, interpret), (x, Ws, bs, a)
+def _pinn_mlp_forward2_fwd(x, Ws, bs, a, act, block_n, interpret, d2_dirs):
+    return (_forward2_impl(x, Ws, bs, a, act, block_n, interpret, d2_dirs),
+            (x, Ws, bs, a))
 
 
-def _pinn_mlp_forward2_bwd(act, block_n, interpret, saved, cts):
+def _pinn_mlp_forward2_bwd(act, block_n, interpret, d2_dirs, saved, cts):
     x, Ws, bs, a = saved
-    _, vjp = jax.vjp(lambda xx, W, b, aa: ref.pinn_mlp_ref2(xx, W, b, aa, act=act),
-                     x, Ws, bs, a)
+    _, vjp = jax.vjp(lambda xx, W, b, aa: ref.pinn_mlp_ref2(
+        xx, W, b, aa, act=act, d2_dirs=d2_dirs), x, Ws, bs, a)
     return vjp(cts)
 
 
 _pinn_mlp_forward2.defvjp(_pinn_mlp_forward2_fwd, _pinn_mlp_forward2_bwd)
 
 
-@partial(jax.jit, static_argnames=("act", "block_n", "interpret"))
-def pinn_mlp_forward2(x, Ws, bs, a, act="tanh", block_n=256, interpret=None):
+@partial(jax.jit, static_argnames=("act", "block_n", "interpret", "d2_dirs"))
+def pinn_mlp_forward2(x, Ws, bs, a, act="tanh", block_n=256, interpret=None,
+                      d2_dirs=None):
     """Fused PINN MLP forward + input-Jacobian + diagonal input-Hessian.
 
     x: (N, d_in); Ws: list[(in,out)]; bs: list[(out,)]; a: (n_hidden,) slopes.
     Returns (u (N, out), du (d_in, N, out), d2u (d_in, N, out)) with
     d2u[j] = d²u/dx_j² (diagonal only — what the repo's PDE residuals need).
     Differentiable w.r.t. (x, Ws, bs, a) via a checkpointed custom VJP.
+
+    ``d2_dirs`` (static, None = all) prunes the second-order tangent stream to
+    the listed input directions on the recurrence path — the rows a PDE's
+    ``residual_from_derivs`` actually reads (``PDE.d2_dirs``); pruned rows are
+    exact zeros, and the checkpointed backward prunes identically.
     """
-    return _pinn_mlp_forward2(x, tuple(Ws), tuple(bs), a, act, block_n, interpret)
+    return _pinn_mlp_forward2(x, tuple(Ws), tuple(bs), a, act, block_n,
+                              interpret,
+                              None if d2_dirs is None else tuple(d2_dirs))
+
+
+def pinn_mlp_forward2_segments(x_segs, Ws, bs, a, act="tanh", block_n=256,
+                               interpret=None, d2_dirs=None):
+    """Segment-aware megabatch entry: ONE fused dispatch for several point sets.
+
+    x_segs: sequence of (n_i, d_in) arrays sharing d_in (e.g. residual points,
+    flattened interface points, data points).  The segments are concatenated
+    into one megabatch, run through a single :func:`pinn_mlp_forward2` call
+    (one pack_mlp + one kernel launch + one custom-VJP backward instead of
+    len(x_segs) of each), and the (u, du, d2u) bundle is sliced back per
+    segment.  The kernel math is row-independent (every output row depends only
+    on its input row), so each returned bundle is identical to a separate
+    ``pinn_mlp_forward2(x_segs[i], ...)`` call — the jvp-oracle semantics are
+    preserved exactly; only the dispatch count changes.
+
+    Returns a tuple of (u (n_i, out), du (d_in, n_i, out), d2u (d_in, n_i, out))
+    bundles, one per segment.  Segment sizes must be static (they come from the
+    padded batch layout).
+    """
+    sizes = [int(x.shape[0]) for x in x_segs]
+    u, du, d2u = pinn_mlp_forward2(jnp.concatenate(list(x_segs), axis=0), Ws, bs,
+                                   a, act=act, block_n=block_n,
+                                   interpret=interpret, d2_dirs=d2_dirs)
+    out, ofs = [], 0
+    for n in sizes:
+        out.append((u[ofs:ofs + n], du[:, ofs:ofs + n], d2u[:, ofs:ofs + n]))
+        ofs += n
+    return tuple(out)
 
 
 @partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))

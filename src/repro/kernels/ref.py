@@ -30,7 +30,7 @@ def pinn_mlp_ref(x, Ws, bs, a, act="tanh"):
     return u, jnp.stack(dus, axis=0)
 
 
-def pinn_mlp_ref2(x, Ws, bs, a, act="tanh"):
+def pinn_mlp_ref2(x, Ws, bs, a, act="tanh", d2_dirs=None):
     """Reference fused forward + input-Jacobian + DIAGONAL input-Hessian.
 
     Same math as the second-order Pallas kernel (``pinn_mlp._kernel2``) written
@@ -44,26 +44,42 @@ def pinn_mlp_ref2(x, Ws, bs, a, act="tanh"):
     x: (N, d_in); Ws: sequence of (in, out); bs: sequence of (out,);
     a: (n_hidden,) adaptive slopes.  Returns (u (N, out), du (d_in, N, out),
     d2u (d_in, N, out)) where d2u[j] = d²u/dx_j² (no mixed terms).
+
+    ``d2_dirs`` (static tuple, None = all directions) prunes the second-order
+    tangent stream to the directions the PDE residual actually consumes
+    (``PDE.d2_dirs``) — e.g. Burgers carries one ``s`` column instead of two,
+    first-order systems none.  Pruned rows of d2u come back as exact zeros, so
+    the output shape (and everything downstream) is unchanged.
     """
     from repro.kernels.pinn_mlp import _act_triple
 
     phi, dphi, d2phi = _act_triple(act)
     d_in = x.shape[1]
+    sel = tuple(range(d_in)) if d2_dirs is None else tuple(d2_dirs)
+    full = sel == tuple(range(d_in))
     h = x @ Ws[0] + bs[0]
     # stack the d_in directions on a leading axis: (d_in, N, width)
     t = jnp.broadcast_to(Ws[0][:d_in, None, :], (d_in,) + h.shape)
-    s = jnp.zeros_like(t)
+    s = jnp.zeros((len(sel),) + h.shape, h.dtype)
     for l in range(len(Ws) - 1):
         z = a[l] * h
         d1 = dphi(z) * a[l]
-        d2 = d2phi(z) * (a[l] * a[l])
-        s = d2[None] * t * t + d1[None] * s
+        if sel:  # empty sel (first-order PDE): s stays the (0, N, w) stream
+            d2 = d2phi(z) * (a[l] * a[l])
+            # static slice per selected direction (sel is a compile-time tuple)
+            tsel = t if full else jnp.stack([t[j] for j in sel])
+            s = d2[None] * tsel * tsel + d1[None] * s
         t = d1[None] * t
         h = phi(z)
         h = h @ Ws[l + 1] + bs[l + 1]
         t = t @ Ws[l + 1]
         s = s @ Ws[l + 1]
-    return h, t, s
+    if full:
+        return h, t, s
+    zero = jnp.zeros_like(h)
+    rows = {j: s[k] for k, j in enumerate(sel)}
+    d2u = jnp.stack([rows.get(j, zero) for j in range(d_in)])
+    return h, t, d2u
 
 
 def attention_ref(q, k, v, causal=True):

@@ -12,6 +12,8 @@ packed-weight prepare step is CSE'd inside one jit scope, and
 ResidualPath.  The exhaustive sweep is marked ``kernel`` (deselected by
 default); a small unmarked subset keeps tier-1 coverage.
 """
+import zlib
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,6 +24,11 @@ from repro.core.losses import ResidualPath
 from repro.core.nets import MLPConfig, SubdomainModelConfig
 from repro.core.pdes import Burgers1D, dir_deriv, dir_deriv2
 from repro.kernels import ops, pinn_mlp_forward2, ref
+
+
+def _seed(*parts):
+    """Deterministic per-config seed (Python hash() is salted per process)."""
+    return zlib.adler32(repr(parts).encode())
 
 
 def _mk_mlp(rng, d_in, width, depth, out, dtype):
@@ -58,7 +65,7 @@ def _oracle_bundle(Ws, bs, a, act, x):
 
 
 def _check(act, dtype, d_in, width, depth, out, n=96, block_n=32):
-    rng = np.random.default_rng(hash((act, d_in, width, depth, out)) % 2**31)
+    rng = np.random.default_rng(_seed(act, d_in, width, depth, out))
     Ws, bs, a = _mk_mlp(rng, d_in, width, depth, out, jnp.float32)
     x = jnp.asarray(rng.uniform(-1, 1, (n, d_in)), jnp.float32)
     u_o, du_o, d2u_o = _oracle_bundle(Ws, bs, a, act, x)
@@ -100,6 +107,141 @@ def test_forward2_width_128_exact_lanes():
 ])
 def test_forward2_parity_sweep(act, dtype, d_in, width, depth, out):
     _check(act, dtype, d_in, width, depth, out)
+
+
+# ---- megabatch (segment-aware) wrapper -------------------------------------
+
+def _check_segments(act, dtype, d_in, width, depth, out, sizes, interpret,
+                    block_n=32):
+    """One concatenated dispatch == separate per-segment calls: the kernel math
+    is row-independent, so segment membership must not matter.  Pallas blocks
+    (interpret=True) match BITWISE; the compiled jnp recurrence may pick a
+    different XLA gemm strategy per batch size (observed ~5e-8 on degenerate
+    single-row segments), so it gets float-noise tolerance."""
+    rng = np.random.default_rng(_seed(act, d_in, width, sizes))
+    Ws, bs, a = _mk_mlp(rng, d_in, width, depth, out, dtype)
+    segs = tuple(jnp.asarray(rng.uniform(-1, 1, (n, d_in)), dtype) for n in sizes)
+    fused_out = ops.pinn_mlp_forward2_segments(segs, Ws, bs, a, act=act,
+                                               block_n=block_n,
+                                               interpret=interpret)
+    assert len(fused_out) == len(sizes)
+    for x, (u, du, d2u) in zip(segs, fused_out):
+        sep = pinn_mlp_forward2(x, Ws, bs, a, act=act, block_n=block_n,
+                                interpret=interpret)
+        assert u.shape == (x.shape[0], out)
+        for got, want in zip((u, du, d2u), sep):
+            if interpret:
+                np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+            else:
+                np.testing.assert_allclose(
+                    np.asarray(got, np.float32), np.asarray(want, np.float32),
+                    rtol=1e-5, atol=1e-5)
+
+
+# tier-1 subset: one layout per dispatch path (compiled jnp recurrence +
+# Pallas interpreter), sizes straddling a block boundary
+@pytest.mark.parametrize("interpret", [None, True])
+def test_forward2_segments_match_separate_calls(interpret):
+    _check_segments("tanh", jnp.float32, 2, 20, 3, 1, (40, 17, 9), interpret)
+
+
+# exhaustive megabatch cases ride the kernel marker so default test time does
+# not regress (run with `pytest -m kernel`)
+@pytest.mark.kernel
+@pytest.mark.parametrize("act", ["tanh", "sin", "cos"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("interpret", [None, True])
+@pytest.mark.parametrize("sizes", [
+    (96, 32, 32),    # block-aligned residual/iface/data layout
+    (100, 7, 1),     # ragged segments, minimum-size data segment
+    (1, 1, 1),       # degenerate: every segment a single point
+    (256, 80, 33),   # >1 point block with ragged tail
+])
+def test_forward2_segments_parity_sweep(act, dtype, interpret, sizes):
+    _check_segments(act, dtype, 2, 24, 3, 1, sizes, interpret)
+
+
+@pytest.mark.parametrize("interpret", [None, True])
+def test_forward2_d2_dirs_pruning(interpret):
+    """PDE-declared second-order pruning: selected d2u rows match the full
+    computation, pruned rows are exact zeros, and (u, du) are untouched."""
+    rng = np.random.default_rng(31)
+    Ws, bs, a = _mk_mlp(rng, 2, 20, 3, 1, jnp.float32)
+    x = jnp.asarray(rng.uniform(-1, 1, (40, 2)), jnp.float32)
+    u_f, du_f, d2u_f = pinn_mlp_forward2(x, Ws, bs, a, block_n=32,
+                                         interpret=interpret)
+    for dirs in ((0,), (1,), ()):
+        u, du, d2u = pinn_mlp_forward2(x, Ws, bs, a, block_n=32,
+                                       interpret=interpret, d2_dirs=dirs)
+        np.testing.assert_allclose(u, u_f, rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(du, du_f, rtol=1e-6, atol=1e-7)
+        for j in range(2):
+            if j in dirs:
+                np.testing.assert_allclose(d2u[j], d2u_f[j], rtol=1e-6,
+                                           atol=1e-6)
+            else:
+                assert not np.any(np.asarray(d2u[j])), \
+                    f"pruned direction {j} must come back as exact zeros"
+
+
+def test_forward2_d2_dirs_pruned_grads_match_full():
+    """A loss that only reads the selected d2u rows gets the same gradients
+    from the pruned custom VJP as from the full one."""
+    rng = np.random.default_rng(37)
+    Ws, bs, a = _mk_mlp(rng, 2, 20, 3, 1, jnp.float32)
+    x = jnp.asarray(rng.uniform(-1, 1, (40, 2)), jnp.float32)
+
+    def loss(Ws, bs, a, dirs):
+        u, du, d2u = pinn_mlp_forward2(x, Ws, bs, a, d2_dirs=dirs)
+        return jnp.sum(u ** 2) + jnp.sum(du ** 2) + 0.1 * jnp.sum(d2u[0] ** 2)
+
+    gp = jax.grad(loss, argnums=(0, 1, 2))(Ws, bs, a, (0,))
+    gf = jax.grad(loss, argnums=(0, 1, 2))(Ws, bs, a, None)
+    for lp, lf in zip(jax.tree.leaves(gp), jax.tree.leaves(gf)):
+        np.testing.assert_allclose(lp, lf, rtol=1e-5, atol=1e-6)
+
+
+def test_euler_residual_path_needs_no_d2(monkeypatch):
+    """Euler1D declares d2_dirs=(): the fused residual path runs a pruned
+    (empty) second-order stream and still matches the jvp oracle."""
+    from repro.core.pdes import Euler1D
+
+    pde = Euler1D()
+    assert pde.d2_dirs == ()
+    cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 3, 16, 2)})
+    params = nets.init_model(cfg, jax.random.PRNGKey(0))
+    pts = jnp.asarray(np.random.default_rng(1).uniform(0.1, 0.9, (24, 2)),
+                      jnp.float32)
+    r_jvp = losses.residual_eval(pde, cfg, params, nets.ACT_TANH, None, pts, None)
+    r_pal = losses.residual_eval(pde, cfg, params, nets.ACT_TANH, None, pts,
+                                 ResidualPath(act="tanh"))
+    np.testing.assert_allclose(r_pal, r_jvp, rtol=1e-4, atol=1e-5)
+
+
+def test_forward2_segments_grads_match_separate_calls():
+    """The megabatch entry differentiates like the separate calls: one custom
+    VJP over the concatenated batch == sum of per-segment VJPs."""
+    rng = np.random.default_rng(23)
+    Ws, bs, a = _mk_mlp(rng, 2, 20, 3, 1, jnp.float32)
+    xs = tuple(jnp.asarray(rng.uniform(-1, 1, (n, 2)), jnp.float32)
+               for n in (24, 9, 5))
+
+    def loss_seg(Ws, bs, a):
+        outs = ops.pinn_mlp_forward2_segments(xs, Ws, bs, a, interpret=True,
+                                              block_n=32)
+        return sum(jnp.sum(u ** 2) + jnp.sum(du ** 2) + 0.1 * jnp.sum(d2u ** 2)
+                   for u, du, d2u in outs)
+
+    def loss_sep(Ws, bs, a):
+        return sum(
+            jnp.sum(u ** 2) + jnp.sum(du ** 2) + 0.1 * jnp.sum(d2u ** 2)
+            for u, du, d2u in (pinn_mlp_forward2(x, Ws, bs, a, interpret=True,
+                                                 block_n=32) for x in xs))
+
+    gf = jax.grad(loss_seg, argnums=(0, 1, 2))(Ws, bs, a)
+    go = jax.grad(loss_sep, argnums=(0, 1, 2))(Ws, bs, a)
+    for lf, lo in zip(jax.tree.leaves(gf), jax.tree.leaves(go)):
+        np.testing.assert_allclose(lf, lo, rtol=1e-5, atol=1e-5)
 
 
 def test_forward2_block_padding_edge():
