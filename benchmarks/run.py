@@ -23,7 +23,7 @@ from benchmarks.common import emit
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig6,fig8,fig9,table2,fig13,roofline")
+                    help="comma list: fig4,fig6,fig8,fig9,table2,fig13,serve,roofline")
     ap.add_argument("--quick", action="store_true", help="fewer sizes/iters")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-fast subset: tiny fig4 jvp-vs-pallas + "
@@ -32,11 +32,12 @@ def main() -> None:
 
     from benchmarks import (fig4_cost_profile, fig6_comp_comm, fig8_weak_scaling,
                             fig9_strong_scaling, fig13_inverse, roofline,
-                            table2_spacetime)
+                            serve_throughput, table2_spacetime)
 
     if args.smoke:
         rows = fig4_cost_profile.run(iters=3, path="pallas", smoke=True)
         rows += fig4_cost_profile.run_e2e(iters=1, smoke=True)
+        rows += serve_throughput.run(iters=2, smoke=True)
         rows += roofline.residual_rows("both")
         emit(rows)
         return
@@ -52,6 +53,7 @@ def main() -> None:
                                                 iters=3 if quick else 5),
         "table2": lambda: table2_spacetime.run(iters=3 if quick else 5),
         "fig13": lambda: fig13_inverse.run(iters=3 if quick else 5),
+        "serve": lambda: serve_throughput.run(iters=3 if quick else 5),
         "roofline": roofline.run,
     }
     only = args.only.split(",") if args.only else list(suite)

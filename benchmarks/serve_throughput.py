@@ -1,0 +1,118 @@
+"""Serving throughput: points/sec through the FieldEngine + frontend.
+
+Workload is the paper's §7.6 end product — the 10-region irregular-map
+inverse-conductivity field (two nets per region, heterogeneous Table-3
+activations) served as a stitched single-valued K(x,y).  Three paths per
+batch size:
+
+* ``cold``        — full-order engine evaluation (route -> ONE fused network
+                    entry -> stitch), compile-warm but cache-cold;
+* ``first_order`` — the cheaper value+gradient-only entry (second-order
+                    tangent stream disabled, ``d2_dirs=()``);
+* ``cached``      — the same grid re-requested through the frontend's LRU
+                    (a repeated dashboard grid costs no dispatch).
+
+Writes ``BENCH_serve.json`` at the repo root (``BENCH_serve_smoke.json``
+with --smoke); per-config dispatch counts assert the single-dispatch claim.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)
+sys.path.insert(0, os.path.join(_REPO, "src"))
+
+import jax
+import numpy as np
+
+from repro.core import us_map_decomposition
+from repro.core.nets import MLPConfig, SubdomainModelConfig, stacked_init
+from repro.core.pdes import HeatConduction2D
+from repro.serve import FieldBundle, FieldEngine, ServeFrontend
+
+from benchmarks.common import REPO, emit
+
+BENCH_JSON = os.path.join(REPO, "BENCH_serve.json")
+TABLE3_ACTS = ["tanh", "sin", "cos", "tanh", "sin", "cos", "tanh", "sin",
+               "cos", "tanh"]
+
+
+def _bundle(seed: int = 0) -> FieldBundle:
+    decomp = us_map_decomposition()
+    cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 40, 3),
+                                     "k": MLPConfig(2, 1, 40, 3)})
+    params, codes = stacked_init(cfg, decomp.n_sub, jax.random.PRNGKey(seed),
+                                 TABLE3_ACTS)
+    return FieldBundle(model_cfg=cfg, params=params, decomp=decomp,
+                       act_codes=np.asarray(codes), pde=HeatConduction2D())
+
+
+def _grid(n: int, decomp, seed: int = 0) -> np.ndarray:
+    verts = np.concatenate(decomp.polygons)
+    lo, hi = verts.min(axis=0), verts.max(axis=0)
+    side = int(np.ceil(np.sqrt(n)))
+    gx, gy = np.meshgrid(np.linspace(lo[0], hi[0], side),
+                         np.linspace(lo[1], hi[1], side))
+    return np.stack([gx.ravel(), gy.ravel()], axis=1)[:n]
+
+
+def _time(fn, iters: int) -> float:
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def run(iters: int = 5, smoke: bool = False):
+    bundle = _bundle()
+    engine = FieldEngine(bundle)
+    rows, records = [], []
+    batch_sizes = (2048,) if smoke else (512, 2048, 8192, 32768)
+    for n in batch_sizes:
+        grid = _grid(n, bundle.decomp)
+        engine.evaluate(grid, order=2)       # compile warmup (both tiers)
+        engine.evaluate(grid, order=1)
+        d0 = engine.n_dispatches
+        t_cold = _time(lambda: engine.evaluate(grid, order=2), iters)
+        assert engine.n_dispatches - d0 == iters, "evaluate != one dispatch"
+        t_fo = _time(lambda: engine.evaluate(grid, order=1), iters)
+        fe = ServeFrontend(engine, order=2)
+        fe.query(grid)                       # populate the cache
+        t_hot = _time(lambda: fe.query(grid), iters)
+        rec = {
+            "batch": n, "backend": jax.default_backend(),
+            "cold_pts_per_s": round(n / t_cold, 1),
+            "first_order_pts_per_s": round(n / t_fo, 1),
+            "cached_pts_per_s": round(n / max(t_hot, 1e-9), 1),
+            "first_order_speedup": round(t_cold / t_fo, 2),
+            "cached_speedup": round(t_cold / max(t_hot, 1e-9), 1),
+            "hit_rate": fe.stats()["hit_rate"],
+        }
+        records.append(rec)
+        rows.append((f"serve/b{n}/cold", rec["cold_pts_per_s"], "pts/s"))
+        rows.append((f"serve/b{n}/first_order", rec["first_order_pts_per_s"],
+                     "pts/s"))
+        rows.append((f"serve/b{n}/cached", rec["cached_pts_per_s"], "pts/s"))
+        rows.append((f"serve/b{n}/cached_speedup", rec["cached_speedup"], "x"))
+    out = BENCH_JSON.replace(".json", "_smoke.json") if smoke else BENCH_JSON
+    with open(out, "w") as f:
+        json.dump({"workload": "us_map 10-region inverse-heat bundle "
+                               "(2 nets/region, Table-3 acts)",
+                   "records": records}, f, indent=1)
+    print(f"[serve_throughput] wrote {out}", file=sys.stderr)
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    emit(run(iters=args.iters, smoke=args.smoke))

@@ -6,6 +6,12 @@ per-region activation functions (paper Table 3) and heterogeneous residual-point
 counts.  XPINN residual+solution continuity stitches the regions.
 
     PYTHONPATH=src python examples/inverse_heat_map.py [--steps 2000] [--balance]
+
+Train -> export -> serve (the paper's end product is the FIELD, not the
+checkpoint): ``--export DIR`` freezes the trained networks + geometry into a
+self-contained serve bundle, and ``--serve-demo`` loads it back and serves a
+dense K(x,y) grid through the stitched single-dispatch engine + caching
+frontend (see EXPERIMENTS.md §Serving).
 """
 import argparse
 import sys
@@ -17,7 +23,8 @@ sys.path.insert(0, "src")
 
 from repro.core import (  # noqa: E402
     DDConfig, HeatConduction2D, LossWeights, ReferenceTrainer, XPINN,
-    build_topology, evaluate_l2, us_map_decomposition,
+    build_topology, evaluate_l2, restore_train_state, save_train_state,
+    us_map_decomposition,
 )
 from repro.core.nets import MLPConfig, SubdomainModelConfig  # noqa: E402
 from repro.data import make_batch  # noqa: E402
@@ -27,6 +34,42 @@ TABLE3_COUNTS = [300, 400, 500, 400, 300, 400, 80, 300, 500, 400]
 TABLE3_ACTS = ["tanh", "sin", "cos", "tanh", "sin", "cos", "tanh", "sin", "cos", "tanh"]
 
 
+def serve_demo(export_dir: str, grid_n: int = 80):
+    """Load the exported bundle and serve the inferred K(x,y) field."""
+    from repro.serve import FieldEngine, ServeFrontend, load_bundle
+
+    bundle = load_bundle(export_dir)
+    engine = FieldEngine(bundle)
+    frontend = ServeFrontend(engine, order=2)
+    verts = np.concatenate(bundle.decomp.polygons)
+    lo, hi = verts.min(axis=0), verts.max(axis=0)
+    gx, gy = np.meshgrid(np.linspace(lo[0], hi[0], grid_n),
+                         np.linspace(lo[1], hi[1], grid_n))
+    grid = np.stack([gx.ravel(), gy.ravel()], axis=1)
+
+    t0 = time.time()
+    out = frontend.query(grid)            # cold: one fused dispatch
+    t_cold = time.time() - t0
+    t0 = time.time()
+    out2 = frontend.query(grid)           # repeated dashboard grid: cache hit
+    t_hot = time.time() - t0
+    assert all((out[k] == out2[k]).all() for k in out)
+
+    inside = ~np.isnan(out["u"][:, 0])
+    ex = bundle.pde.exact(grid[inside])
+    kd = out["u"][inside, 1] - ex[:, 1]
+    rel = np.linalg.norm(kd) / np.linalg.norm(ex[:, 1])
+    res = np.abs(out["residual"][inside, 0])
+    n = len(grid)
+    print(f"[serve] {n} grid points ({inside.sum()} inside the map): "
+          f"cold {n / t_cold:,.0f} pts/s, cached {n / max(t_hot, 1e-9):,.0f} pts/s "
+          f"({t_cold / max(t_hot, 1e-9):.0f}x)")
+    print(f"[serve] served K field rel_L2 vs exact: {rel:.4f}; "
+          f"residual error-proxy median {np.median(res):.3e} "
+          f"p99 {np.quantile(res, 0.99):.3e}")
+    print(f"[serve] frontend stats: {frontend.stats()}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=2000)
@@ -34,7 +77,20 @@ def main():
                     help="equalize per-region residual points (straggler fix)")
     ap.add_argument("--chunk", type=int, default=250,
                     help="outer steps per device dispatch (lax.scan driver)")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="checkpoint the TrainState every N steps (0 = off)")
+    ap.add_argument("--ckpt", default="ckpt_inverse",
+                    help="checkpoint directory for --save-every")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume from the latest checkpoint under DIR")
+    ap.add_argument("--export", default=None, metavar="DIR",
+                    help="freeze the trained field into a serve bundle")
+    ap.add_argument("--serve-demo", action="store_true",
+                    help="after training, load the --export bundle and serve "
+                         "a dense K(x,y) grid (cold vs cached)")
     args = ap.parse_args()
+    if args.serve_demo and not args.export:
+        ap.error("--serve-demo requires --export DIR")
 
     pde = HeatConduction2D()
     decomp = us_map_decomposition()
@@ -54,22 +110,41 @@ def main():
         act_codes=TABLE3_ACTS, lrs=6e-3,
     )
     state = trainer.init(0)
+    done = 0
+    if args.resume:
+        state = restore_train_state(args.resume, state)
+        done = int(state.step)
+        print(f"[inverse] resumed from {args.resume} at step {done}")
     b = batch.device_arrays()
 
+    report_every = 250
     t0 = time.time()
-    done = 0
+    t_done = done
     while done < args.steps:
-        n = min(max(args.chunk, 1), args.steps - done, 250 - done % 250)
+        n = min(max(args.chunk, 1), args.steps - done)
         state, terms = trainer.run_chunk(state, b, n)
-        done += n
-        if done % 250 == 0 or done == args.steps:
+        prev, done = done, done + n
+        if args.save_every and done // args.save_every > prev // args.save_every:
+            save_train_state(args.ckpt, state)
+        if done == args.steps or done // report_every > prev // report_every:
             loss = float(np.asarray(terms["loss"])[-1].sum())
             err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
             print(f"[inverse] step {done:5d} loss={loss:9.4f} rel_L2(T,K)={err:.4f} "
-                  f"({done/(time.time()-t0):.1f} it/s)")
+                  f"({(done - t_done)/(time.time()-t0):.1f} it/s)")
 
     err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
     print(f"[inverse] final rel L2 error (T, K stacked) vs exact: {err:.4f}")
+
+    if args.export:
+        from repro.serve import export_bundle
+
+        path = export_bundle(args.export, state.params, model_cfg, decomp,
+                             act_codes=TABLE3_ACTS, pde=pde, n_iface=16,
+                             step=int(state.step),
+                             metadata={"rel_l2": err, "steps": int(state.step)})
+        print(f"[inverse] exported field bundle -> {path}")
+    if args.serve_demo:
+        serve_demo(args.export)
 
 
 if __name__ == "__main__":

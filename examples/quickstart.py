@@ -18,7 +18,7 @@ import jax  # noqa: E402
 
 from repro.core import (  # noqa: E402
     Burgers1D, CartesianDecomposition, DDConfig, ReferenceTrainer, XPINN,
-    build_topology, evaluate_l2,
+    build_topology, evaluate_l2, restore_train_state, save_train_state,
 )
 from repro.core.nets import MLPConfig, SubdomainModelConfig  # noqa: E402
 from repro.data import make_batch  # noqa: E402
@@ -35,6 +35,12 @@ def main():
     ap.add_argument("--chunk", type=int, default=250,
                     help="outer steps per device dispatch (lax.scan driver); "
                          "1 falls back to the per-step jit loop")
+    ap.add_argument("--save-every", type=int, default=0,
+                    help="checkpoint the TrainState every N steps (0 = off)")
+    ap.add_argument("--ckpt", default="ckpt_quickstart",
+                    help="checkpoint directory for --save-every")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume from the latest checkpoint under DIR")
     args = ap.parse_args()
 
     pde = Burgers1D()
@@ -50,27 +56,31 @@ def main():
                                DDConfig(method=XPINN, residual_path=args.path),
                                lrs=2e-3)
     state = trainer.init(0)
+    done = 0
+    if args.resume:
+        state = restore_train_state(args.resume, state)
+        done = int(state.step)
+        print(f"[quickstart] resumed from {args.resume} at step {done}")
     b = batch.device_arrays()
 
     report_every = 250
     t0 = time.time()
-    done = 0
+    t_done = done
     while done < args.steps:
-        # align chunk boundaries with the report cadence so each distinct
-        # chunk length compiles once
-        n = min(max(args.chunk, 1), args.steps - done,
-                report_every - done % report_every)
+        n = min(max(args.chunk, 1), args.steps - done)
         if args.chunk <= 1:
             state, terms = trainer.step(state, b)
             n, last_loss = 1, float(np.asarray(terms["loss"]).sum())
         else:
             state, terms = trainer.run_chunk(state, b, n)
             last_loss = float(np.asarray(terms["loss"])[-1].sum())
-        done += n
-        if done % report_every == 0 or done == args.steps:
+        prev, done = done, done + n
+        if args.save_every and done // args.save_every > prev // args.save_every:
+            save_train_state(args.ckpt, state)
+        if done == args.steps or done // report_every > prev // report_every:
             err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
             print(f"[quickstart] step {done:5d} loss={last_loss:8.4f} rel_L2={err:.4f} "
-                  f"({done/(time.time()-t0):.1f} it/s)")
+                  f"({(done - t_done)/(time.time()-t0):.1f} it/s)")
 
     err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
     print(f"[quickstart] final rel L2 error vs Cole-Hopf exact: {err:.4f}")

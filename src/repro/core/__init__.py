@@ -8,5 +8,5 @@ from repro.core.nets import MLPConfig, SubdomainModelConfig
 from repro.core.pdes import Burgers1D, HeatConduction2D, NavierStokes2D
 from repro.core.trainer import (
     DDConfig, DataParallelTrainer, DistributedDDTrainer, ReferenceTrainer, TrainState,
-    evaluate_l2,
+    evaluate_l2, restore_train_state, save_train_state,
 )

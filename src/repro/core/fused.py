@@ -74,6 +74,34 @@ def model_bundle(
     return bundle
 
 
+def model_bundle_select(
+    cfg: SubdomainModelConfig,
+    params: dict,
+    x,                       # (n, dim)
+    act_code,                # traced integer activation code (0/1/2)
+    width_masks: dict | None = None,
+    d2_dirs: tuple | None = None,
+):
+    """Fused (u, du, d2u) with a TRACED activation code — the serving path for
+    models whose subdomains declare different activations (paper Table 3).
+
+    Same folding (adaptive slopes, width masks) and same concatenated-field
+    output contract as :func:`model_bundle`, dispatching to
+    ``ops.pinn_mlp_forward2_select`` so a ``vmap`` over stacked subdomain
+    params + per-subdomain codes stays a single traced network entry.
+    ``d2_dirs=()`` turns off the second-order tangent stream (value +
+    first-order-only inference).
+    """
+    outs = []
+    for name, c in cfg.nets.items():
+        wm = None if width_masks is None else width_masks.get(name)
+        Ws, bs, a = _fold_net(c, params[name], wm, x.dtype)
+        outs.append(ops.pinn_mlp_forward2_select(x, Ws, bs, a, act_code,
+                                                 d2_dirs=d2_dirs))
+    return tuple(jnp.concatenate([o[i] for o in outs], axis=-1)
+                 for i in range(3))
+
+
 def model_bundle_segments(
     cfg: SubdomainModelConfig,
     params: dict,

@@ -514,24 +514,37 @@ class DataParallelTrainer:
         return fn(state, batch)
 
 
+# ------------------------------------------------------------------ checkpointing
+
+def save_train_state(root: str, state: TrainState, keep: int = 3,
+                     metadata: dict | None = None) -> str:
+    """Checkpoint a trainer's :class:`TrainState` (atomic npz + manifest)."""
+    from repro.checkpoint import ckpt
+
+    tree = {"params": state.params, "opt": state.opt, "step": state.step}
+    return ckpt.save(root, int(state.step), tree, metadata=metadata, keep=keep)
+
+
+def restore_train_state(root: str, like: TrainState,
+                        step: int | None = None) -> TrainState:
+    """Restore a :class:`TrainState` saved by :func:`save_train_state`.
+
+    ``like`` (e.g. a fresh ``trainer.init()``) fixes the pytree structure;
+    restored leaves come back as committed device arrays so the result feeds
+    straight into the donating ``run_chunk`` drivers.  Bitwise resume is
+    asserted in ``tests/test_serve.py``.
+    """
+    from repro.checkpoint import ckpt
+
+    tree, _ = ckpt.restore(
+        root, {"params": like.params, "opt": like.opt, "step": like.step},
+        step=step)
+    tree = jax.tree.map(jnp.asarray, tree)
+    return TrainState(params=tree["params"], opt=tree["opt"],
+                      step=tree["step"])
+
+
 # ----------------------------------------------------------------------- evaluation
-
-# one jitted batched-apply per model architecture (MLPConfig is frozen/hashable;
-# pytree-structure changes — e.g. width_masks present or not — retrace automatically)
-_EVAL_APPLY_CACHE: dict = {}
-
-
-def _batched_apply(model_cfg: SubdomainModelConfig):
-    key = tuple(model_cfg.nets.items())
-    fn = _EVAL_APPLY_CACHE.get(key)
-    if fn is None:
-        def apply(params, pts, codes, width_masks):
-            return jax.vmap(
-                lambda p, x, c, wm: nets.model_apply(model_cfg, p, x, c, wm)
-            )(params, pts, codes, width_masks)
-        fn = _EVAL_APPLY_CACHE[key] = jax.jit(apply)
-    return fn
-
 
 def evaluate_l2(
     decomp: Decomposition,
@@ -545,10 +558,15 @@ def evaluate_l2(
 ) -> float:
     """Relative L2 error of the stitched solution (eq. 4) against pde.exact.
 
-    One jitted vmapped evaluation over the stacked subdomain axis (every
-    subdomain samples the same number of points, so no padding is needed) —
-    not a per-subdomain Python loop of op-by-op applies.
+    Runs on the serving engine: one fused network entry for ALL subdomains
+    (``repro.serve.engine.FieldEngine`` — the same route -> evaluate -> stitch
+    path production queries take), not a per-subdomain Python loop.  Engine
+    compilations are cached process-wide, so the periodic in-training eval
+    stays one dispatch per call.
     """
+    from repro.serve.engine import FieldEngine
+    from repro.serve.export import FieldBundle
+
     rng = np.random.default_rng(seed)
     m = n_pts // decomp.n_sub + 1
     pts = np.stack([decomp.sample_interior(q, m, rng)
@@ -556,8 +574,16 @@ def evaluate_l2(
     ex = pde.exact(pts.reshape(-1, decomp.dim))
     if ex is None:
         raise ValueError("PDE has no exact solution")
-    pred = _batched_apply(model_cfg)(
-        params, jnp.asarray(pts, jnp.float32), jnp.asarray(act_codes), width_masks)
-    e = (np.asarray(pred).reshape(ex.shape) - ex).ravel()
+    # pde stays OUT of the bundle: only u is consumed here, and a PDE without
+    # the batched *_from_derivs methods (jvp-fallback-only) must still eval
+    bundle = FieldBundle(model_cfg=model_cfg, params=params, decomp=decomp,
+                         act_codes=np.asarray(act_codes, np.int32),
+                         width_masks=width_masks, pde=None)
+    # tol=0: the points are sampled strictly inside their subdomains (no
+    # interface widening needed), and plain containment routing keeps custom
+    # Decomposition subclasses working (tol > 0 is Cartesian/Polygon-only)
+    pred = FieldEngine(bundle, tol=0.0).evaluate(pts.reshape(-1, decomp.dim),
+                                                 order=1)["u"]
+    e = (pred.reshape(ex.shape) - ex).ravel()
     r = ex.ravel()
     return float(np.linalg.norm(e) / (np.linalg.norm(r) + 1e-30))

@@ -166,6 +166,25 @@ def pinn_mlp_forward2(x, Ws, bs, a, act="tanh", block_n=256, interpret=None,
                               None if d2_dirs is None else tuple(d2_dirs))
 
 
+@partial(jax.jit, static_argnames=("d2_dirs",))
+def pinn_mlp_forward2_select(x, Ws, bs, a, code, d2_dirs=None):
+    """Fused second-order bundle with a TRACED activation code (serving path).
+
+    Same (u, du, d2u) contract as :func:`pinn_mlp_forward2`, but the activation
+    is selected per call by ``code`` (0=tanh, 1=sin, 2=cos) instead of being a
+    static specialization — so a ``vmap`` over stacked subdomain params with
+    per-subdomain codes stays ONE traced network entry even when subdomains use
+    heterogeneous (paper Table 3) activations.  Always the batched jnp
+    recurrence (``ref.pinn_mlp_ref2_select``): the Pallas kernel specializes
+    the activation statically, and a data-dependent activation select inside
+    VMEM buys nothing on the serving path.  ``d2_dirs=()`` disables the
+    second-order tangent stream entirely (value + first-order inference).
+    """
+    return ref.pinn_mlp_ref2_select(x, tuple(Ws), tuple(bs), a, code,
+                                    d2_dirs=None if d2_dirs is None
+                                    else tuple(d2_dirs))
+
+
 def pinn_mlp_forward2_segments(x_segs, Ws, bs, a, act="tanh", block_n=256,
                                interpret=None, d2_dirs=None):
     """Segment-aware megabatch entry: ONE fused dispatch for several point sets.

@@ -53,7 +53,42 @@ def pinn_mlp_ref2(x, Ws, bs, a, act="tanh", d2_dirs=None):
     """
     from repro.kernels.pinn_mlp import _act_triple
 
-    phi, dphi, d2phi = _act_triple(act)
+    return _ref2_impl(x, Ws, bs, a, _act_triple(act), d2_dirs)
+
+
+def _select_triple(code):
+    """(phi, phi', phi'') with the activation chosen by a TRACED integer code
+    (same branchless where-chain as ``nets.activation``).  All three branches
+    are evaluated — acceptable because activations are a small fraction of the
+    recurrence's matmul cost, and it buys a single fused entry across
+    subdomains with heterogeneous (paper Table 3) activations."""
+    def sel(t, s, c):
+        return jnp.where(code == 0, t, jnp.where(code == 1, s, c))
+
+    def d2_tanh(z):
+        th = jnp.tanh(z)
+        return -2.0 * th * (1.0 - th * th)
+
+    phi = lambda z: sel(jnp.tanh(z), jnp.sin(z), jnp.cos(z))
+    dphi = lambda z: sel(1.0 - jnp.tanh(z) ** 2, jnp.cos(z), -jnp.sin(z))
+    d2phi = lambda z: sel(d2_tanh(z), -jnp.sin(z), -jnp.cos(z))
+    return phi, dphi, d2phi
+
+
+def pinn_mlp_ref2_select(x, Ws, bs, a, code, d2_dirs=None):
+    """:func:`pinn_mlp_ref2` with a per-call TRACED activation code.
+
+    Serving entry for models whose subdomains use DIFFERENT activations: under
+    ``vmap`` over the stacked subdomain axis the code is data, so one traced
+    recurrence covers every subdomain — the static-act kernel path would need
+    one entry per activation group.  Matches ``pinn_mlp_ref2(act=name)``
+    bitwise for the activation the code selects.
+    """
+    return _ref2_impl(x, Ws, bs, a, _select_triple(code), d2_dirs)
+
+
+def _ref2_impl(x, Ws, bs, a, triple, d2_dirs):
+    phi, dphi, d2phi = triple
     d_in = x.shape[1]
     sel = tuple(range(d_in)) if d2_dirs is None else tuple(d2_dirs)
     full = sel == tuple(range(d_in))

@@ -1,0 +1,15 @@
+"""Field-serving subsystem: export -> route -> stitch -> serve.
+
+The paper's end product is a *field* (e.g. the §7.6 inferred conductivity
+K(x,y) over the ten-region map); training produces per-subdomain networks.
+This package freezes a trained cPINN/XPINN into a self-contained artifact
+(:mod:`repro.serve.export`), routes arbitrary query clouds to subdomains with
+vectorized geometry tests (:mod:`repro.serve.routing`), evaluates ALL
+subdomains in one fused network entry and stitches a single-valued field
+across interfaces (:mod:`repro.serve.engine`), and fronts the engine with
+microbatching + an LRU result cache (:mod:`repro.serve.frontend`).
+"""
+from repro.serve.export import FieldBundle, export_bundle, load_bundle
+from repro.serve.engine import FieldEngine
+from repro.serve.frontend import ServeFrontend
+from repro.serve.routing import membership_matrix, route, RoutedQuery

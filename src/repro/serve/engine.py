@@ -1,0 +1,144 @@
+"""Single-dispatch stitched inference: the serving hot path.
+
+``FieldEngine.evaluate(pts)`` answers "u / grad u / flux / residual at these N
+points" for a frozen :class:`~repro.serve.export.FieldBundle`:
+
+1. **route** (host, vectorized): claim matrix + per-subdomain buckets
+   (:mod:`repro.serve.routing`);
+2. **evaluate** (device, ONE dispatch): all subdomains enter the network in a
+   single fused traced entry — ``vmap`` over the stacked subdomain axis of one
+   :func:`repro.core.fused.model_bundle` call (static activation shared by all
+   subdomains -> Pallas-kernel-capable path) or one
+   :func:`repro.core.fused.model_bundle_select` call (heterogeneous Table-3
+   activations, traced per-subdomain codes) — never a per-subdomain Python
+   loop;
+3. **stitch** (host): claims are averaged so interface points are
+   single-valued (XPINN eq. 4), unclaimed (outside-domain) points come back
+   NaN.
+
+Two entry tiers (``order``): ``order=2`` is the full bundle (residual doubles
+as a served error-proxy diagnostic); ``order=1`` disables the second-order
+tangent stream entirely (``d2_dirs=()`` — the "no d2 at all" end of the PR-2
+pruning axis) for cheaper pure-inference calls.
+
+Compiled programs are cached process-wide keyed on the static evaluation
+signature, so short-lived engines (e.g. one per ``evaluate_l2`` call) reuse
+compilations; bucketed routing keeps distinct query sizes from retracing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fused
+from repro.core.nets import SubdomainModelConfig
+from repro.serve import routing
+from repro.serve.export import FieldBundle
+
+# process-wide compiled-program cache: static signature -> jitted fn
+_EVAL_CACHE: dict = {}
+
+
+def _stitch(routed: routing.RoutedQuery, arr: np.ndarray,
+            claims: np.ndarray) -> np.ndarray:
+    """Average each point's claims: (n_sub, m, ...) -> (N, ...)."""
+    flat = arr.reshape((arr.shape[0] * arr.shape[1],) + arr.shape[2:])
+    out = np.full((len(routed.pts),) + flat.shape[1:], np.nan, flat.dtype)
+    prim = routed.primary
+    out[routed.pt_idx[prim]] = flat[routed.rows[prim]]
+    if not prim.all():  # interface points: accumulate extra claims, then mean
+        np.add.at(out, routed.pt_idx[~prim], flat[routed.rows[~prim]])
+        multi = claims > 1
+        out[multi] /= claims[multi].reshape((-1,) + (1,) * (out.ndim - 1))
+    return out
+
+
+class FieldEngine:
+    """Frozen-field evaluation with one fused network entry per query batch."""
+
+    def __init__(self, bundle: FieldBundle, tol: float = 1e-9,
+                 bucket: int = 64, block_n: int = 256,
+                 interpret: bool | None = None):
+        self.bundle = bundle
+        self.tol, self.bucket = tol, bucket
+        self.block_n, self.interpret = block_n, interpret
+        codes = np.asarray(
+            bundle.act_codes if bundle.act_codes is not None
+            else np.zeros((bundle.n_sub,), np.int32), np.int32)
+        assert codes.shape == (bundle.n_sub,)
+        self._codes = jnp.asarray(codes)
+        # one shared activation -> static-act fused path (kernel-capable);
+        # heterogeneous -> traced-code select path.  Both are ONE traced entry.
+        self.uniform_act = fused.uniform_act_name(codes.tolist())
+        self.n_dispatches = 0   # device dispatches issued (1 per evaluate)
+
+    # ------------------------------------------------------------ internals
+    def _route(self, pts) -> routing.RoutedQuery:
+        return routing.route(self.bundle.decomp, pts, tol=self.tol,
+                             bucket=self.bucket)
+
+    def _device_args(self, routed: routing.RoutedQuery):
+        return (self.bundle.params, jnp.asarray(routed.X), self._codes,
+                self.bundle.width_masks)
+
+    def _get_fn(self, order: int):
+        cfg: SubdomainModelConfig = self.bundle.model_cfg
+        pde = self.bundle.pde
+        if order == 2 and pde is None:
+            raise ValueError("order=2 (flux/residual) needs a bundle PDE; "
+                             "use order=1 for bare field serving")
+        if pde is not None and not type(pde).supports_derivs():
+            raise ValueError(
+                f"bundle PDE {pde.name} lacks the batched *_from_derivs "
+                "methods the serving engine assembles flux/residual from; "
+                "export the bundle with pde=None for bare field serving")
+        wm_key = (None if self.bundle.width_masks is None
+                  else tuple(sorted(self.bundle.width_masks)))
+        key = (tuple(cfg.nets.items()), self.uniform_act, order, pde, wm_key,
+               self.block_n, self.interpret)
+        fn = _EVAL_CACHE.get(key)
+        if fn is not None:
+            return fn
+        # order=1: no second-order stream at all; order=2: the directions the
+        # PDE residual consumes (PR-2 pruning, generalized down to "none")
+        d2 = () if order == 1 else (pde.d2_dirs if pde is not None else None)
+        uniform, block_n, interpret = self.uniform_act, self.block_n, self.interpret
+
+        def one(p, x, code, wm):
+            if uniform is not None:
+                u, du, d2u = fused.model_bundle(cfg, p, x, uniform, wm,
+                                                block_n, interpret, d2_dirs=d2)
+            else:
+                u, du, d2u = fused.model_bundle_select(cfg, p, x, code, wm,
+                                                       d2_dirs=d2)
+            out = {"u": u, "grad_u": jnp.moveaxis(du, 0, 1)}  # (m, dim, F)
+            if pde is not None:
+                out["flux"] = pde.flux_from_derivs(x, u, du)
+                if order == 2:
+                    out["residual"] = pde.residual_from_derivs(x, u, du, d2u)
+            return out
+
+        fn = _EVAL_CACHE[key] = jax.jit(
+            lambda params, X, codes, wms: jax.vmap(one)(params, X, codes, wms))
+        return fn
+
+    # ------------------------------------------------------------ public API
+    def evaluate(self, pts, order: int = 2) -> dict:
+        """Stitched field quantities at an arbitrary query cloud.
+
+        Returns numpy arrays in query order: ``u (N, n_fields)``,
+        ``grad_u (N, dim, n_fields)``, and — when the bundle carries a PDE —
+        ``flux (N, n_eq, dim)`` plus, for ``order=2``, ``residual (N, n_eq)``
+        (a served error proxy: large residual = low local confidence).
+        Interface points (claimed by >= 2 subdomains) are the two-sided
+        average; points outside every subdomain are NaN.
+        """
+        routed = self._route(pts)
+        fn = self._get_fn(order)
+        outs = fn(*self._device_args(routed))
+        self.n_dispatches += 1
+        claims = routed.claims
+        return {k: _stitch(routed, np.asarray(v), claims)
+                for k, v in outs.items()}

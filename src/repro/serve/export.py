@@ -1,0 +1,203 @@
+"""Frozen field artifacts: export a trained cPINN/XPINN, load it anywhere.
+
+An exported bundle is a :mod:`repro.checkpoint.ckpt` checkpoint directory
+(npz + manifest, atomic publication, keep-last-k) whose manifest metadata
+additionally freezes everything needed to rebuild an inference-ready object
+WITHOUT importing the trainer:
+
+* the per-field :class:`~repro.core.nets.MLPConfig` stack,
+* per-subdomain activation codes and width masks (paper Table-3 heterogeneity),
+* the decomposition geometry (Cartesian grid spec or exact polygon vertices)
+  plus the interface sampling density (``n_iface``) so the communication
+  :class:`~repro.core.domain.Topology` can be rebuilt on demand,
+* the PDE identity + constructor fields (for served flux/residual outputs).
+
+``load_bundle`` returns a :class:`FieldBundle`; feed it to
+:class:`repro.serve.engine.FieldEngine` to serve the stitched field.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.domain import (
+    CartesianDecomposition, Decomposition, PolygonDecomposition, Topology,
+    build_topology,
+)
+from repro.core.nets import MLPConfig, SubdomainModelConfig, act_code
+from repro.core.pdes import PDE, REGISTRY
+
+FORMAT = "repro.serve.bundle/1"
+
+
+@dataclass
+class FieldBundle:
+    """Everything the inference engine needs, trainer-free.
+
+    ``params`` are the STACKED per-subdomain parameters (leading n_sub axis,
+    exactly the trainers' ``TrainState.params`` layout); ``act_codes`` is an
+    (n_sub,) int vector; ``width_masks`` the optional per-net (n_sub, width)
+    capacity masks.  Construct directly for in-memory serving (e.g.
+    ``evaluate_l2``) or via :func:`load_bundle` from an exported artifact.
+    """
+
+    model_cfg: SubdomainModelConfig
+    params: Any
+    decomp: Decomposition
+    act_codes: np.ndarray | None = None
+    width_masks: dict | None = None
+    pde: PDE | None = None
+    n_iface: int = 16
+    metadata: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_sub(self) -> int:
+        return self.decomp.n_sub
+
+    def topology(self) -> Topology:
+        """Rebuild the exchange topology frozen with the bundle."""
+        return build_topology(self.decomp, self.n_iface)
+
+
+# ------------------------------------------------------------- geometry specs
+
+def decomp_spec(decomp: Decomposition) -> dict:
+    if isinstance(decomp, CartesianDecomposition):
+        return {"kind": "cartesian", "bounds": [list(b) for b in decomp.bounds],
+                "nx": decomp.nx, "ny": decomp.ny}
+    if isinstance(decomp, PolygonDecomposition):
+        return {"kind": "polygon",
+                "polygons": [p.tolist() for p in decomp.polygons],
+                "tol": decomp.tol}
+    raise TypeError(f"cannot serialize decomposition {type(decomp).__name__}")
+
+
+def decomp_from_spec(spec: dict) -> Decomposition:
+    if spec["kind"] == "cartesian":
+        return CartesianDecomposition(spec["bounds"], spec["nx"], spec["ny"])
+    if spec["kind"] == "polygon":
+        return PolygonDecomposition([np.asarray(p) for p in spec["polygons"]],
+                                    tol=spec.get("tol", 1e-9))
+    raise ValueError(f"unknown decomposition kind {spec['kind']!r}")
+
+
+def _pde_spec(pde: PDE | None) -> dict | None:
+    if pde is None:
+        return None
+    return {"name": pde.name, "fields": dataclasses.asdict(pde)}
+
+
+def _pde_from_spec(spec: dict | None) -> PDE | None:
+    if spec is None:
+        return None
+    return REGISTRY[spec["name"]](**spec["fields"])
+
+
+def _normalize_codes(act_codes, model_cfg: SubdomainModelConfig,
+                     n_sub: int) -> np.ndarray:
+    if act_codes is None:
+        from repro.core.nets import uniform_model_act
+        return np.full((n_sub,), act_code(uniform_model_act(model_cfg)),
+                       np.int32)
+    return np.array([act_code(c) if isinstance(c, str) else int(c)
+                     for c in np.asarray(act_codes).tolist()], np.int32)
+
+
+# ------------------------------------------------------------- export / load
+
+def export_bundle(
+    root: str,
+    params: Any,
+    model_cfg: SubdomainModelConfig,
+    decomp: Decomposition,
+    act_codes=None,
+    width_masks: dict | None = None,
+    pde: PDE | None = None,
+    n_iface: int = 16,
+    step: int = 0,
+    metadata: dict | None = None,
+) -> str:
+    """Freeze a trained field into a self-contained serve artifact.
+
+    ``params`` is the stacked params pytree (``TrainState.params``); returns
+    the checkpoint directory written (atomic — crash-safe like any
+    ``repro.checkpoint`` save).
+    """
+    n_sub = decomp.n_sub
+    codes = _normalize_codes(act_codes, model_cfg, n_sub)
+    tree = {"params": params}
+    if width_masks is not None:
+        tree["width_masks"] = width_masks
+    meta = {
+        "format": FORMAT,
+        "model": {name: dataclasses.asdict(c)
+                  for name, c in model_cfg.nets.items()},
+        "act_codes": codes.tolist(),
+        "width_mask_nets": (sorted(width_masks) if width_masks else []),
+        "decomp": decomp_spec(decomp),
+        "pde": _pde_spec(pde),
+        "n_iface": int(n_iface),
+        "user": metadata or {},
+    }
+    return ckpt.save(root, step, tree, metadata=meta)
+
+
+def _params_template(model_cfg: SubdomainModelConfig, n_sub: int) -> dict:
+    out = {}
+    for name, c in model_cfg.nets.items():
+        out[name] = {
+            "W": [np.zeros((n_sub, fi, fo), np.float32)
+                  for fi, fo in c.layer_dims],
+            "b": [np.zeros((n_sub, fo), np.float32)
+                  for _, fo in c.layer_dims],
+            "a": np.zeros((n_sub, c.depth), np.float32),
+        }
+    return out
+
+
+def load_bundle(root: str, step: int | None = None) -> FieldBundle:
+    """Load an exported bundle into an inference-ready :class:`FieldBundle`.
+
+    Self-contained: rebuilds model config, geometry, and PDE from the manifest
+    metadata, then restores the parameter arrays against a structure template
+    derived from the config — no trainer (and no training state) involved.
+    """
+    if step is None:
+        step = ckpt.latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no bundle under {root}")
+    with open(os.path.join(root, f"step_{step:010d}", "manifest.json")) as f:
+        meta = json.load(f)["metadata"]
+    if meta.get("format") != FORMAT:
+        raise ValueError(f"{root} is not a serve bundle "
+                         f"(format={meta.get('format')!r})")
+    model_cfg = SubdomainModelConfig(
+        nets={name: MLPConfig(**fields) for name, fields in meta["model"].items()})
+    decomp = decomp_from_spec(meta["decomp"])
+    n_sub = decomp.n_sub
+    like = {"params": _params_template(model_cfg, n_sub)}
+    if meta["width_mask_nets"]:
+        widths = {name: model_cfg.nets[name].width
+                  for name in meta["width_mask_nets"]}
+        like["width_masks"] = {name: np.zeros((n_sub, w), np.float32)
+                               for name, w in widths.items()}
+    tree, _ = ckpt.restore(root, like, step=step)
+    return FieldBundle(
+        model_cfg=model_cfg,
+        params=jax.tree.map(jnp.asarray, tree["params"]),
+        decomp=decomp,
+        act_codes=np.asarray(meta["act_codes"], np.int32),
+        width_masks=(jax.tree.map(jnp.asarray, tree["width_masks"])
+                     if meta["width_mask_nets"] else None),
+        pde=_pde_from_spec(meta["pde"]),
+        n_iface=meta["n_iface"],
+        metadata=meta["user"],
+    )

@@ -1,0 +1,155 @@
+"""Dependency-free batching/caching frontend over a :class:`FieldEngine`.
+
+Serving traffic is bursty and repetitive: dashboards re-request the same
+dense grids, and many small concurrent requests waste dispatches.  The
+frontend fixes both without threads or external deps:
+
+* **microbatching** — queued requests are aggregated (concatenated) into
+  engine calls of up to ``max_batch`` points; the engine math is
+  row-independent, so each request's slice of the batched result equals its
+  standalone evaluation;
+* **LRU result cache** — keyed on the query-cloud signature (bytes + shape +
+  order); a repeated grid is answered from memory with the BITWISE-identical
+  arrays of the first evaluation, no device dispatch;
+* **counters** — requests / points / hit rate / dispatches / evaluation
+  seconds, for the throughput benchmark and ops dashboards.
+
+Usage: ``submit() ... flush() ... result()`` for explicit microbatching, or
+``query()`` as the one-shot convenience (submit + flush + result).
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.serve.engine import FieldEngine
+
+
+def _signature(pts: np.ndarray, order: int) -> tuple:
+    return (pts.shape, order,
+            hashlib.sha1(np.ascontiguousarray(pts).tobytes()).hexdigest())
+
+
+class ServeFrontend:
+    def __init__(self, engine: FieldEngine, order: int = 2,
+                 max_batch: int = 16384, cache_size: int = 64):
+        self.engine = engine
+        self.order = order
+        self.max_batch = max_batch
+        self.cache_size = cache_size
+        self._cache: OrderedDict[tuple, dict] = OrderedDict()
+        self._pending: list[tuple[int, np.ndarray, tuple]] = []
+        self._results: dict[int, dict] = {}
+        self._next_ticket = 0
+        self.counters = {"requests": 0, "points": 0, "cache_hits": 0,
+                         "cache_misses": 0, "dispatches": 0,
+                         "dispatched_points": 0, "eval_seconds": 0.0}
+
+    # ------------------------------------------------------------- caching
+    def _cache_get(self, key: tuple) -> dict | None:
+        out = self._cache.get(key)
+        if out is not None:
+            self._cache.move_to_end(key)
+        return out
+
+    def _cache_put(self, key: tuple, result: dict) -> None:
+        self._cache[key] = result
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    # ------------------------------------------------------------- requests
+    def submit(self, pts) -> int:
+        """Queue a request; returns a ticket for :meth:`result`."""
+        from repro.serve.routing import _as_cloud
+
+        pts = _as_cloud(pts, self.engine.bundle.decomp.dim)
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self.counters["requests"] += 1
+        self.counters["points"] += len(pts)
+        key = _signature(pts, self.order)
+        cached = self._cache_get(key)
+        if cached is not None:
+            self.counters["cache_hits"] += 1
+            self._results[ticket] = cached
+        else:
+            self.counters["cache_misses"] += 1
+            self._pending.append((ticket, pts, key))
+        return ticket
+
+    def flush(self) -> None:
+        """Evaluate queued requests in microbatches of <= ``max_batch`` points.
+
+        Duplicate clouds inside one flush are evaluated once and shared; each
+        microbatch is ONE engine dispatch regardless of how many requests it
+        aggregates.  A failing evaluation re-queues every not-yet-served
+        request before re-raising, so tickets are never silently lost.
+        """
+        pending, self._pending = self._pending, []
+        by_key: OrderedDict[tuple, list] = OrderedDict()
+        for ticket, pts, key in pending:
+            by_key.setdefault(key, [ticket, pts])
+            if by_key[key][0] != ticket:
+                by_key[key].append(ticket)
+        unique = [(key, v[1], [v[0]] + v[2:]) for key, v in by_key.items()]
+        i = 0
+        while i < len(unique):
+            # greedy microbatch: at least one request, then pack until full
+            batch = [unique[i]]
+            total = len(unique[i][1])
+            i += 1
+            while i < len(unique) and total + len(unique[i][1]) <= self.max_batch:
+                batch.append(unique[i])
+                total += len(unique[i][1])
+                i += 1
+            cloud = np.concatenate([pts for _, pts, _ in batch], axis=0)
+            try:
+                t0 = time.perf_counter()
+                out = self.engine.evaluate(cloud, order=self.order)
+                self.counters["eval_seconds"] += time.perf_counter() - t0
+            except Exception:
+                for key, pts, tickets in batch + unique[i:]:
+                    self._pending.extend((t, pts, key) for t in tickets)
+                raise
+            self.counters["dispatches"] += 1
+            self.counters["dispatched_points"] += len(cloud)
+            ofs = 0
+            for key, pts, tickets in batch:
+                n = len(pts)
+                # detach from the full-microbatch arrays (a view would pin the
+                # whole batch in memory for the cache's lifetime) and freeze:
+                # cache hits hand out the SAME arrays, so caller mutation
+                # would otherwise silently poison later hits
+                res = {}
+                for k, v in out.items():
+                    arr = v[ofs:ofs + n].copy()
+                    arr.flags.writeable = False
+                    res[k] = arr
+                ofs += n
+                self._cache_put(key, res)
+                for t in tickets:
+                    self._results[t] = res
+
+    def result(self, ticket: int) -> dict:
+        return self._results.pop(ticket)
+
+    def query(self, pts) -> dict:
+        """One-shot convenience: submit + flush + result."""
+        t = self.submit(pts)
+        self.flush()
+        return self.result(t)
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        c = dict(self.counters)
+        lookups = c["cache_hits"] + c["cache_misses"]
+        c["hit_rate"] = c["cache_hits"] / lookups if lookups else 0.0
+        # engine throughput counts only points that actually dispatched —
+        # dividing cache-served traffic by dispatch time would inflate it
+        c["points_per_sec"] = (c["dispatched_points"] / c["eval_seconds"]
+                               if c["eval_seconds"] > 0 else float("inf"))
+        return c

@@ -98,6 +98,11 @@ print("RESUME-OK")
     assert "RESUME-OK" in out
 
 
+# PINN-trainer checkpoint wiring (save_train_state / restore_train_state with
+# bitwise resume through run_chunk) is covered in tests/test_serve.py, which
+# stays collected when `hypothesis` is absent and this module is skipped.
+
+
 # ---------------------------------------------------------------- elasticity
 
 def test_remap_params_nearest_centroid():
