@@ -40,7 +40,6 @@ from repro.core.nets import MLPConfig, SubdomainModelConfig, init_model, ACT_TAN
 from repro.core.domain import CartesianDecomposition
 from repro.core.pdes import Burgers1D
 from repro.data import make_vanilla_batch
-from repro.utils import time_fn
 
 from benchmarks.common import REPO, emit
 
@@ -64,11 +63,57 @@ def _phases(pde, cfg, params, batch, res_path: ResidualPath | None = None):
         return jnp.sum(r ** 2)
 
     @jax.jit
-    def backward(p):
+    def forward(p):
+        return vanilla_pinn_loss(pde, cfg, w, p, ACT_TANH, None, batch,
+                                 path=res_path)[0]
+
+    @jax.jit
+    def grad(p):
         return jax.grad(lambda pp: vanilla_pinn_loss(pde, cfg, w, pp, ACT_TANH,
                                                      None, batch, path=res_path)[0])(p)
 
-    return data_loss, res_loss, backward
+    return data_loss, res_loss, forward, grad
+
+
+def _interleaved(fns: dict, arg, iters: int) -> dict:
+    """Per-round us samples per candidate, measured in ROUND-ROBIN.
+
+    The container's CPU quota drifts on minute scales; timing candidate A for
+    its full budget and then candidate B confounds the comparison with the
+    drift.  One pass per round over every candidate puts competing paths
+    seconds (not minutes) apart, so PAIRED per-round statistics (differences,
+    ratios) see the same machine.  Returns the raw per-round lists — derive
+    medians / paired diffs from them, never a difference of medians.
+    """
+    import time as _time
+
+    for fn in fns.values():
+        jax.block_until_ready(fn(arg))  # compile + warm
+        jax.block_until_ready(fn(arg))
+    ts = {k: [] for k in fns}
+    for _ in range(iters):
+        for k, fn in fns.items():
+            t0 = _time.perf_counter()
+            jax.block_until_ready(fn(arg))
+            ts[k].append((_time.perf_counter() - t0) * 1e6)
+    return {k: np.asarray(v) for k, v in ts.items()}
+
+
+def _med(x) -> float:
+    return float(np.median(x))
+
+
+def _paired_ratio(num, den):
+    """Median of per-round ratios over rounds where both diffs are positive
+    (a quota dip can make a small same-round difference go non-positive);
+    falls back to the ratio of median diffs, and to NaN when even the medians
+    are non-positive — a visible sentinel, never a fabricated huge speedup."""
+    num, den = np.asarray(num), np.asarray(den)
+    ok = (num > 0) & (den > 0)
+    if ok.any():
+        return float(np.median(num[ok] / den[ok]))
+    mn, md = float(np.median(num)), float(np.median(den))
+    return mn / md if mn > 0 and md > 0 else float("nan")
 
 
 def run(iters: int = 10, path: str = "jvp", smoke: bool = False):
@@ -82,28 +127,62 @@ def run(iters: int = 10, path: str = "jvp", smoke: bool = False):
         cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, width, depth)})
         params = init_model(cfg, jax.random.PRNGKey(0))
         batch = make_vanilla_batch(dec, pde, n_res, 200, rng)
-        d, r, b = _phases(pde, cfg, params, batch)
-        t_data = time_fn(d, params, iters=iters) * 1e6
-        t_jvp = time_fn(r, params, iters=iters) * 1e6
-        t_bwd = time_fn(b, params, iters=iters) * 1e6
-        rows.append((f"fig4/{tag}/data_loss", round(t_data, 1), "us"))
-        rows.append((f"fig4/{tag}/residual_loss", round(t_jvp, 1), "us"))
-        rows.append((f"fig4/{tag}/backward", round(t_bwd, 1), "us"))
+        d, r, fwd, grad = _phases(pde, cfg, params, batch)
+        fns = {"data": d, "res_jvp": r, "fwd_jvp": fwd, "grad_jvp": grad}
         if pallas:
-            rp = ResidualPath(act="tanh")
-            _, rk, bk = _phases(pde, cfg, params, batch, res_path=rp)
-            t_pal = time_fn(rk, params, iters=iters) * 1e6
-            t_bwd_pal = time_fn(bk, params, iters=iters) * 1e6
-            rows.append((f"fig4/{tag}/residual_loss_pallas", round(t_pal, 1), "us"))
-            rows.append((f"fig4/{tag}/backward_pallas", round(t_bwd_pal, 1), "us"))
-            rows.append((f"fig4/{tag}/residual_speedup", round(t_jvp / t_pal, 2), "x"))
+            # fused hand-derived backward (production) vs checkpointed-ref
+            # oracle — SAME forward, the selector changes only the reverse pass
+            _, rk, fwd_p, grad_fused = _phases(pde, cfg, params, batch,
+                                               ResidualPath(act="tanh"))
+            _, _, _, grad_ref = _phases(pde, cfg, params, batch,
+                                        ResidualPath(act="tanh", bwd="ref"))
+            fns.update(res_pallas=rk, fwd_pallas=fwd_p,
+                       grad_pallas_fused=grad_fused, grad_pallas_ref=grad_ref)
+        t = _interleaved(fns, params, iters)
+        # forward and backward wall-time as SEPARATE columns: bwd = grad - fwd
+        # (the VJP application alone; fwd is the loss evaluation it shares).
+        # All diffs/ratios are PAIRED within a round — same-machine samples —
+        # never a difference of medians (quota drift can make that negative).
+        bwd_jvp_r = t["grad_jvp"] - t["fwd_jvp"]
+        rows.append((f"fig4/{tag}/data_loss", round(_med(t["data"]), 1), "us"))
+        rows.append((f"fig4/{tag}/residual_loss",
+                     round(_med(t["res_jvp"]), 1), "us"))
+        rows.append((f"fig4/{tag}/forward", round(_med(t["fwd_jvp"]), 1), "us"))
+        rows.append((f"fig4/{tag}/backward", round(_med(bwd_jvp_r), 1), "us"))
+        if pallas:
+            bwd_fused_r = t["grad_pallas_fused"] - t["fwd_pallas"]
+            bwd_ref_r = t["grad_pallas_ref"] - t["fwd_pallas"]
+            sp_ref = _paired_ratio(bwd_ref_r, bwd_fused_r)
+            sp_jvp = _paired_ratio(bwd_jvp_r, bwd_fused_r)
+            sp_res = _paired_ratio(t["res_jvp"], t["res_pallas"])
+            rows.append((f"fig4/{tag}/residual_loss_pallas",
+                         round(_med(t["res_pallas"]), 1), "us"))
+            rows.append((f"fig4/{tag}/residual_speedup", round(sp_res, 2), "x"))
+            rows.append((f"fig4/{tag}/forward_pallas",
+                         round(_med(t["fwd_pallas"]), 1), "us"))
+            rows.append((f"fig4/{tag}/backward_pallas_fused",
+                         round(_med(bwd_fused_r), 1), "us"))
+            rows.append((f"fig4/{tag}/backward_pallas_ref",
+                         round(_med(bwd_ref_r), 1), "us"))
+            rows.append((f"fig4/{tag}/backward_speedup_vs_ref",
+                         round(sp_ref, 2), "x"))
+            rows.append((f"fig4/{tag}/backward_speedup_vs_jvp",
+                         round(sp_jvp, 2), "x"))
             records.append({
                 "config": tag, "n_res": n_res, "depth": depth, "width": width,
                 "backend": jax.default_backend(),
-                "jvp_us": round(t_jvp, 1), "pallas_us": round(t_pal, 1),
-                "speedup": round(t_jvp / t_pal, 3),
-                "backward_jvp_us": round(t_bwd, 1),
-                "backward_pallas_us": round(t_bwd_pal, 1),
+                "jvp_us": round(_med(t["res_jvp"]), 1),
+                "pallas_us": round(_med(t["res_pallas"]), 1),
+                "speedup": round(sp_res, 3),
+                # fwd/bwd split columns (whole vanilla-PINN loss): the
+                # backward-kernel win is tracked per backward path
+                "fwd_jvp_us": round(_med(t["fwd_jvp"]), 1),
+                "bwd_jvp_us": round(_med(bwd_jvp_r), 1),
+                "fwd_pallas_us": round(_med(t["fwd_pallas"]), 1),
+                "bwd_pallas_fused_us": round(_med(bwd_fused_r), 1),
+                "bwd_pallas_ref_us": round(_med(bwd_ref_r), 1),
+                "bwd_speedup_vs_ref": round(sp_ref, 3),
+                "bwd_speedup_vs_jvp": round(sp_jvp, 3),
             })
 
     if smoke:
@@ -128,6 +207,33 @@ def run(iters: int = 10, path: str = "jvp", smoke: bool = False):
                        "iters": iters, "rows": records}, f, indent=1)
         print(f"wrote {out}")
     return rows
+
+
+def bwd_parity_rows(steps: int = 10):
+    """Smoke acceptance: the backward selector round-trips — a quickstart-style
+    chunk trained with the hand-derived fused backward lands on the same loss
+    as the checkpointed-ref backward.  Raises on divergence."""
+    from repro.core import (Burgers1D as _B, CartesianDecomposition as _C,
+                            DDConfig, ReferenceTrainer, XPINN, build_topology)
+    from repro.data import make_batch
+
+    pde = _B()
+    dec = _C(((-1, 1), (0, 1)), 2, 2)
+    topo = build_topology(dec, n_iface=20)
+    cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 24, 4)})
+    b = make_batch(dec, topo, pde, n_res=250, n_bnd=80,
+                   rng=np.random.default_rng(0)).device_arrays()
+    final = {}
+    for bp in ("fused", "ref"):
+        tr = ReferenceTrainer(pde, cfg, topo,
+                              DDConfig(method=XPINN, residual_path="pallas",
+                                       backward_path=bp), lrs=2e-3)
+        _, terms = tr.run_chunk(tr.init(0), b, steps)
+        final[bp] = float(np.sum(np.asarray(terms["loss"])[-1]))
+    if not np.allclose(final["fused"], final["ref"], rtol=5e-3, atol=1e-6):
+        raise AssertionError(f"backward selector diverged: {final}")
+    return [("fig4/bwd_parity/fused_loss", round(final["fused"], 6), ""),
+            ("fig4/bwd_parity/ref_loss", round(final["ref"], 6), "")]
 
 
 def run_e2e(iters: int = 3, smoke: bool = False):
@@ -155,9 +261,15 @@ def run_e2e(iters: int = 3, smoke: bool = False):
     b = batch.device_arrays()
 
     rows, records = [], {}
-    for path in ("jvp", "pallas"):
+    # "pallas" = fused hand-derived backward (production default);
+    # "pallas-refbwd" = same forward, PR-1 checkpointed-ref backward — the
+    # end-to-end measure of the backward-kernel win
+    variants = (("jvp", "jvp", "fused"), ("pallas", "pallas", "fused"),
+                ("pallas-refbwd", "pallas", "ref"))
+    for path, res_path, bwd_path in variants:
         tr = ReferenceTrainer(pde, cfg, topo,
-                              DDConfig(method=XPINN, residual_path=path), lrs=2e-3)
+                              DDConfig(method=XPINN, residual_path=res_path,
+                                       backward_path=bwd_path), lrs=2e-3)
 
         def loop_once():
             st = tr.init(0)
@@ -208,6 +320,9 @@ def run_e2e(iters: int = 3, smoke: bool = False):
         quickstart = float(m[-1])
         rows.append(("fig4/e2e/quickstart_500_steps_per_s", quickstart, "it/s"))
 
+    bwd_e2e = round(records["pallas"]["chunk_it_s"]
+                    / records["pallas-refbwd"]["chunk_it_s"], 3)
+    rows.append(("fig4/e2e/bwd_fused_vs_ref_chunk_speedup", bwd_e2e, "x"))
     out = BENCH_STEP_JSON.replace(".json", "_smoke.json") if smoke else BENCH_STEP_JSON
     with open(out, "w") as f:
         json.dump({
@@ -215,6 +330,7 @@ def run_e2e(iters: int = 3, smoke: bool = False):
                         f"chunk={steps} steps",
             "backend": jax.default_backend(), "iters": iters,
             "paths": records,
+            "bwd_fused_vs_ref_chunk_speedup": bwd_e2e,
             "quickstart_500_it_s": quickstart,
             # static dispatch accounting (see EXPERIMENTS.md §Step fusion)
             "entries_per_loss_eval": {"pre_megabatch": 3, "megabatch": 1},

@@ -35,7 +35,11 @@ def main() -> None:
                             serve_throughput, table2_spacetime)
 
     if args.smoke:
+        # the pallas fig4 pass exercises BOTH custom-VJP backwards (fused
+        # hand-derived vs checkpointed-ref) and reports the fwd/bwd split
         rows = fig4_cost_profile.run(iters=3, path="pallas", smoke=True)
+        # selector round-trip: fused-bwd and ref-bwd training must agree
+        rows += fig4_cost_profile.bwd_parity_rows()
         rows += fig4_cost_profile.run_e2e(iters=1, smoke=True)
         rows += serve_throughput.run(iters=2, smoke=True)
         rows += roofline.residual_rows("both")

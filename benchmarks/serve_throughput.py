@@ -12,6 +12,16 @@ batch size:
 * ``cached``      — the same grid re-requested through the frontend's LRU
                     (a repeated dashboard grid costs no dispatch).
 
+Measurement protocol (this container's CPU quota drifts >1.5x on minute
+scales): warmup/compile time is measured and reported SEPARATELY
+(``warmup_s`` columns), then the steady-state paths are timed in
+INTERLEAVED rounds — one cold + one first-order call per round, speedups
+taken as the median of per-round ratios, so both paths see the same
+machine.  (The earlier sequential-phase protocol produced a spurious
+0.79x "first-order regression" at batch 8192 that was pure quota drift;
+the engine compile cache is asserted stable across the steady-state loop,
+ruling out retracing.)
+
 Writes ``BENCH_serve.json`` at the repo root (``BENCH_serve_smoke.json``
 with --smoke); per-config dispatch counts assert the single-dispatch claim.
 """
@@ -61,50 +71,76 @@ def _grid(n: int, decomp, seed: int = 0) -> np.ndarray:
     return np.stack([gx.ravel(), gy.ravel()], axis=1)[:n]
 
 
-def _time(fn, iters: int) -> float:
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        fn()
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
 
 
 def run(iters: int = 5, smoke: bool = False):
+    from repro.serve import engine as engine_mod
+
     bundle = _bundle()
     engine = FieldEngine(bundle)
     rows, records = [], []
     batch_sizes = (2048,) if smoke else (512, 2048, 8192, 32768)
     for n in batch_sizes:
         grid = _grid(n, bundle.decomp)
-        engine.evaluate(grid, order=2)       # compile warmup (both tiers)
-        engine.evaluate(grid, order=1)
-        d0 = engine.n_dispatches
-        t_cold = _time(lambda: engine.evaluate(grid, order=2), iters)
-        assert engine.n_dispatches - d0 == iters, "evaluate != one dispatch"
-        t_fo = _time(lambda: engine.evaluate(grid, order=1), iters)
+        # ---- warmup/compile: measured separately, never mixed into steady
+        warm2 = _timed(lambda: engine.evaluate(grid, order=2))
+        warm1 = _timed(lambda: engine.evaluate(grid, order=1))
         fe = ServeFrontend(engine, order=2)
-        fe.query(grid)                       # populate the cache
-        t_hot = _time(lambda: fe.query(grid), iters)
+        fe.query(grid)                       # populate the LRU
+        # ---- steady state: interleaved rounds (drift-robust)
+        def n_traces():
+            # shape-keyed compile count across every cached jitted engine fn —
+            # len(_EVAL_CACHE) alone can't see jit retracing new shapes
+            return sum(fn._cache_size() for fn in engine_mod._EVAL_CACHE.values())
+
+        d0, c0 = engine.n_dispatches, n_traces()
+        t_cold, t_fo, t_hot, ratios = [], [], [], []
+        for _ in range(iters):
+            tc = _timed(lambda: engine.evaluate(grid, order=2))
+            tf = _timed(lambda: engine.evaluate(grid, order=1))
+            th = _timed(lambda: fe.query(grid))
+            t_cold.append(tc)
+            t_fo.append(tf)
+            t_hot.append(th)
+            ratios.append(tc / tf)
+        assert engine.n_dispatches - d0 == 2 * iters, "evaluate != one dispatch"
+        retraces = n_traces() - c0
+        assert retraces == 0, \
+            f"steady-state loop recompiled {retraces}x — bucket sizing is retracing"
+        t_c, t_f = float(np.median(t_cold)), float(np.median(t_fo))
+        t_h = float(np.median(t_hot))
         rec = {
             "batch": n, "backend": jax.default_backend(),
-            "cold_pts_per_s": round(n / t_cold, 1),
-            "first_order_pts_per_s": round(n / t_fo, 1),
-            "cached_pts_per_s": round(n / max(t_hot, 1e-9), 1),
-            "first_order_speedup": round(t_cold / t_fo, 2),
-            "cached_speedup": round(t_cold / max(t_hot, 1e-9), 1),
+            "warmup_order2_s": round(warm2, 3),
+            "warmup_order1_s": round(warm1, 3),
+            "cold_pts_per_s": round(n / t_c, 1),
+            "first_order_pts_per_s": round(n / t_f, 1),
+            "cached_pts_per_s": round(n / max(t_h, 1e-9), 1),
+            # median of per-round ratios, NOT ratio of medians: each round's
+            # pair shares the machine, so quota drift cancels
+            "first_order_speedup": round(float(np.median(ratios)), 2),
+            "cached_speedup": round(t_c / max(t_h, 1e-9), 1),
+            "steady_retraces": retraces,
             "hit_rate": fe.stats()["hit_rate"],
         }
         records.append(rec)
         rows.append((f"serve/b{n}/cold", rec["cold_pts_per_s"], "pts/s"))
         rows.append((f"serve/b{n}/first_order", rec["first_order_pts_per_s"],
                      "pts/s"))
+        rows.append((f"serve/b{n}/first_order_speedup",
+                     rec["first_order_speedup"], "x"))
         rows.append((f"serve/b{n}/cached", rec["cached_pts_per_s"], "pts/s"))
         rows.append((f"serve/b{n}/cached_speedup", rec["cached_speedup"], "x"))
     out = BENCH_JSON.replace(".json", "_smoke.json") if smoke else BENCH_JSON
     with open(out, "w") as f:
         json.dump({"workload": "us_map 10-region inverse-heat bundle "
                                "(2 nets/region, Table-3 acts)",
+                   "protocol": "warmup split out; steady state interleaved "
+                               "(per-round ratios)",
                    "records": records}, f, indent=1)
     print(f"[serve_throughput] wrote {out}", file=sys.stderr)
     return rows

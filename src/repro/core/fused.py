@@ -62,15 +62,17 @@ def model_bundle(
     block_n: int = 256,
     interpret: bool | None = None,
     d2_dirs: tuple | None = None,
+    bwd: str = "fused",
 ):
     """Fused (u, du, d2u) for the full multi-net subdomain model.
 
     Returns u (n, F), du (dim, n, F), d2u (dim, n, F) with F = cfg.out_dim and
     d2u the diagonal second derivatives, differentiable w.r.t. params via the
-    kernel's custom VJP.
+    kernel's custom VJP (``bwd`` selects the hand-derived fused reverse sweep
+    or the checkpointed-ref oracle — see ``ops.pinn_mlp_forward2``).
     """
     (bundle,) = model_bundle_segments(cfg, params, (x,), act, width_masks,
-                                      block_n, interpret, d2_dirs)
+                                      block_n, interpret, d2_dirs, bwd)
     return bundle
 
 
@@ -111,6 +113,7 @@ def model_bundle_segments(
     block_n: int = 256,
     interpret: bool | None = None,
     d2_dirs: tuple | None = None,
+    bwd: str = "fused",
 ):
     """Megabatched fused bundles: ONE kernel entry per field net for ALL point
     segments of a training step (residual + interface + data points).
@@ -129,7 +132,7 @@ def model_bundle_segments(
         bundles = ops.pinn_mlp_forward2_segments(x_segs, Ws, bs, a, act=act,
                                                  block_n=block_n,
                                                  interpret=interpret,
-                                                 d2_dirs=d2_dirs)
+                                                 d2_dirs=d2_dirs, bwd=bwd)
         for segs, b in zip(per_seg, bundles):
             segs.append(b)
     return tuple(

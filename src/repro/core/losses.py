@@ -51,11 +51,17 @@ class ResidualPath:
     (and the PDE implements the derivative-bundle methods).  ``None`` anywhere a
     path is accepted means the per-point jvp fallback (the paper's §4.1
     graph-based differentiation), which stays the correctness oracle.
+
+    ``bwd`` selects the custom-VJP backward of the fused entry: ``"fused"``
+    (default) is the hand-derived single-sweep reverse kernel over saved layer
+    residuals; ``"ref"`` is the PR-1 checkpointed ``jax.vjp`` through the
+    reference recurrence (oracle / fallback).
     """
 
     act: str = "tanh"
     block_n: int = 256
     interpret: bool | None = None  # None: compiled kernel on TPU, jnp recurrence elsewhere
+    bwd: str = "fused"
 
 
 @jax.tree_util.register_dataclass
@@ -84,7 +90,7 @@ def residual_eval(pde: PDE, cfg, params, act_code, width_masks, pts, path):
     if path is not None:
         u, du, d2u = fused.model_bundle(cfg, params, pts, path.act, width_masks,
                                         path.block_n, path.interpret,
-                                        d2_dirs=pde.d2_dirs)
+                                        d2_dirs=pde.d2_dirs, bwd=path.bwd)
         return pde.residual_from_derivs(pts, u, du, d2u)
     u_fn = _u_fn(pde, cfg, params, act_code, width_masks)
     return jax.vmap(lambda x: pde.residual(u_fn, x))(pts)
@@ -105,7 +111,8 @@ def interface_payload(
         # O(K * n_iface) — tiny next to the residual set that needs d2u anyway.
         ub, dub, d2ub = fused.model_bundle(cfg, params, flat, path.act,
                                            width_masks, path.block_n,
-                                           path.interpret, d2_dirs=pde.d2_dirs)
+                                           path.interpret, d2_dirs=pde.d2_dirs,
+                                           bwd=path.bwd)
         u = ub.reshape(K, nI, pde.n_fields)
         if method == CPINN:
             g = pde.flux_from_derivs(flat, ub, dub).reshape(K, nI, pde.n_eq, dim)
@@ -158,7 +165,8 @@ def network_eval(
     if path is not None:
         res_b, iface_b, data_b = fused.model_bundle_segments(
             cfg, params, (batch.res_pts, iface_flat, batch.data_pts), path.act,
-            width_masks, path.block_n, path.interpret, d2_dirs=pde.d2_dirs)
+            width_masks, path.block_n, path.interpret, d2_dirs=pde.d2_dirs,
+            bwd=path.bwd)
         res = pde.residual_from_derivs(batch.res_pts, *res_b)
         ub, dub, d2ub = iface_b
         u = ub.reshape(K, nI, pde.n_fields)
@@ -267,7 +275,8 @@ def vanilla_pinn_loss(
     if path is not None:
         res_b, data_b = fused.model_bundle_segments(
             cfg, params, (batch.res_pts, batch.data_pts), path.act,
-            width_masks, path.block_n, path.interpret, d2_dirs=pde.d2_dirs)
+            width_masks, path.block_n, path.interpret, d2_dirs=pde.d2_dirs,
+            bwd=path.bwd)
         res = pde.residual_from_derivs(batch.res_pts, *res_b)
         pred = data_b[0]
     else:

@@ -43,6 +43,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import utils
 from repro.core import fused, halo, losses, nets
+from repro.kernels import ops
 from repro.core.domain import Decomposition, Topology
 from repro.core.losses import CPINN, XPINN, LossWeights, SubBatch
 from repro.core.nets import SubdomainModelConfig
@@ -60,6 +61,8 @@ class DDConfig:
     adam: adam_lib.AdamConfig = field(default_factory=adam_lib.AdamConfig)
     disable_exchange: bool = False   # benchmark ablation: comm replaced by own payload
     residual_path: str = "jvp"       # "jvp" (per-point closures) | "pallas" (fused kernel)
+    backward_path: str = "fused"     # "fused" (hand-derived reverse sweep) | "ref"
+                                     # (checkpointed jax.vjp oracle); pallas path only
 
 
 @jax.tree_util.register_dataclass
@@ -92,6 +95,8 @@ class _DDCommon:
         # explicitly requested pallas path that can't be honored is an error,
         # not a silent fallback.
         self.res_path = None
+        if cfg.backward_path not in ops.BWD_PATHS:
+            raise ValueError(f"unknown backward_path {cfg.backward_path!r}")
         if cfg.residual_path == "pallas":
             act = (nets.uniform_model_act(model_cfg) if act_codes is None
                    else fused.uniform_act_name(act_codes))
@@ -103,7 +108,7 @@ class _DDCommon:
                 raise ValueError(
                     f"residual_path='pallas': {pde.name} lacks residual_from_derivs/"
                     "flux_from_derivs")
-            self.res_path = losses.ResidualPath(act=act)
+            self.res_path = losses.ResidualPath(act=act, bwd=cfg.backward_path)
         elif cfg.residual_path != "jvp":
             raise ValueError(f"unknown residual_path {cfg.residual_path!r}")
         self.lrs = jnp.full((n,), float(lrs)) if np.isscalar(lrs) else jnp.asarray(
@@ -382,6 +387,7 @@ class DataParallelTrainer:
         mesh: Mesh | None = None,
         adam_cfg: adam_lib.AdamConfig = adam_lib.AdamConfig(),
         residual_path: str = "jvp",
+        backward_path: str = "fused",
     ):
         self.pde, self.model_cfg, self.weights = pde, model_cfg, weights
         self.n = n_workers
@@ -393,10 +399,12 @@ class DataParallelTrainer:
         self.act = nets.uniform_model_act(model_cfg)
         self.act_code = nets.act_code(self.act)
         self.res_path = None
+        if backward_path not in ops.BWD_PATHS:
+            raise ValueError(f"unknown backward_path {backward_path!r}")
         if residual_path == "pallas":
             if not type(pde).supports_derivs():
                 raise ValueError(f"residual_path='pallas': {pde.name} lacks bundle methods")
-            self.res_path = losses.ResidualPath(act=self.act)
+            self.res_path = losses.ResidualPath(act=self.act, bwd=backward_path)
         elif residual_path != "jvp":
             raise ValueError(f"unknown residual_path {residual_path!r}")
         if mesh is None:

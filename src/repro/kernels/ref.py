@@ -75,6 +75,21 @@ def _select_triple(code):
     return phi, dphi, d2phi
 
 
+def _select_quad(code):
+    """:func:`_select_triple` extended with phi''' (the reverse sweep of the
+    second-order tangent recurrence differentiates phi'' once more).  The
+    per-activation third derivatives are the kernel's own (``_act_quad``), not
+    a second copy."""
+    from repro.kernels.pinn_mlp import _act_quad
+
+    def sel(t, s, c):
+        return jnp.where(code == 0, t, jnp.where(code == 1, s, c))
+
+    d3s = [_act_quad(n)[3] for n in ("tanh", "sin", "cos")]
+    d3phi = lambda z: sel(d3s[0](z), d3s[1](z), d3s[2](z))
+    return _select_triple(code) + (d3phi,)
+
+
 def pinn_mlp_ref2_select(x, Ws, bs, a, code, d2_dirs=None):
     """:func:`pinn_mlp_ref2` with a per-call TRACED activation code.
 
@@ -87,7 +102,7 @@ def pinn_mlp_ref2_select(x, Ws, bs, a, code, d2_dirs=None):
     return _ref2_impl(x, Ws, bs, a, _select_triple(code), d2_dirs)
 
 
-def _ref2_impl(x, Ws, bs, a, triple, d2_dirs):
+def _ref2_impl(x, Ws, bs, a, triple, d2_dirs, save=False):
     phi, dphi, d2phi = triple
     d_in = x.shape[1]
     sel = tuple(range(d_in)) if d2_dirs is None else tuple(d2_dirs)
@@ -96,7 +111,12 @@ def _ref2_impl(x, Ws, bs, a, triple, d2_dirs):
     # stack the d_in directions on a leading axis: (d_in, N, width)
     t = jnp.broadcast_to(Ws[0][:d_in, None, :], (d_in,) + h.shape)
     s = jnp.zeros((len(sel),) + h.shape, h.dtype)
+    hs, ts, ss = [], [], []
     for l in range(len(Ws) - 1):
+        if save:  # residuals of the reverse sweep: streams ENTERING stage l
+            hs.append(h)
+            ts.append(t)
+            ss.append(s)
         z = a[l] * h
         d1 = dphi(z) * a[l]
         if sel:  # empty sel (first-order PDE): s stays the (0, N, w) stream
@@ -110,11 +130,125 @@ def _ref2_impl(x, Ws, bs, a, triple, d2_dirs):
         t = t @ Ws[l + 1]
         s = s @ Ws[l + 1]
     if full:
-        return h, t, s
-    zero = jnp.zeros_like(h)
-    rows = {j: s[k] for k, j in enumerate(sel)}
-    d2u = jnp.stack([rows.get(j, zero) for j in range(d_in)])
-    return h, t, d2u
+        outs = (h, t, s)
+    else:
+        zero = jnp.zeros_like(h)
+        rows = {j: s[k] for k, j in enumerate(sel)}
+        outs = (h, t, jnp.stack([rows.get(j, zero) for j in range(d_in)]))
+    if save:
+        return outs, (tuple(hs), tuple(ts), tuple(ss))
+    return outs
+
+
+def _ref2_bwd(x, Ws, a, res, quad, d2_dirs, cts):
+    """Hand-derived reverse sweep of :func:`_ref2_impl` (closed form, NOT
+    autodiff).  One backward pass over the saved per-layer residuals produces
+    every cotangent; no forward recompute.
+
+    Per activation stage ``g = phi(z)``, ``z = a h`` with tangent rules
+    ``t~ = phi'(z)·a·t`` and ``s~ = phi''(z)·a²·t² + phi'(z)·a·s`` the
+    cotangent flow (p_k = phi^(k)(z)) is
+
+        h̄  = ḡ·p1·a  +  Σ_j t̄~_j·t_j·p2·a²
+                       +  Σ_k s̄~_k·(t_k²·p3·a³ + s_k·p2·a²)
+        t̄_j = t̄~_j·p1·a  (+ s̄~_j·2·p2·a²·t_j   for selected j)
+        s̄_k = s̄~_k·p1·a
+        ā   = Σ ḡ·p1·h + Σ_j t̄~_j·t_j·(p2·h·a + p1)
+            + Σ_k s̄~_k·(t_k²·(p3·h·a² + 2·p2·a) + s_k·(p2·h·a + p1))
+
+    and through each affine layer ``(h, t, s) @ W`` everything multiplies by
+    ``Wᵀ`` while ``W̄ = gᵀh̄ + Σ t~ᵀt̄ + Σ s~ᵀs̄``.  The input layer closes with
+    ``x̄ = h̄₀ W₀ᵀ``, ``W̄₀ = xᵀh̄₀ + row_j Σ_n t̄₀``, ``b̄₀ = Σ_n h̄₀``
+    (``t₀,j`` is row j of W₀ broadcast; ``s₀ = 0``).
+
+    ``res`` is the ``save=True`` payload of :func:`_ref2_impl`; ``cts`` the
+    (ū, d̄u, d̄2u) cotangents.  Returns (x̄, W̄s, b̄s, ā).
+    """
+    phi, dphi, d2phi, d3phi = quad
+    hs, ts, ss = res
+    d_in = x.shape[1]
+    sel = tuple(range(d_in)) if d2_dirs is None else tuple(d2_dirs)
+    full = sel == tuple(range(d_in))
+    cu, cdu, cd2u = cts
+    L = len(Ws) - 1
+    bar_h, bar_t = cu, cdu
+    # pruned d2u rows are constant zeros — their cotangents never reach inputs
+    if sel:
+        bar_s = cd2u if full else jnp.stack([cd2u[j] for j in sel])
+    else:
+        bar_s = jnp.zeros((0,) + cu.shape, cu.dtype)
+    cWs, cbs = [None] * (L + 1), [None] * (L + 1)
+    ca_rev = []
+    for l in reversed(range(L)):
+        W, al = Ws[l + 1], a[l]
+        h, t, s = hs[l], ts[l], ss[l]
+        z = al * h
+        p1, p2, p3 = dphi(z), d2phi(z), d3phi(z)
+        d1 = p1 * al
+        d2v = p2 * (al * al)
+        if sel:
+            tsel = t if full else jnp.stack([t[j] for j in sel])
+        else:
+            tsel = jnp.zeros((0,) + h.shape, h.dtype)
+        g = phi(z)
+        t_tl = d1[None] * t                              # t~ entering affine
+        s_tl = d2v[None] * tsel * tsel + d1[None] * s    # s~ entering affine
+        # ---- affine layer l+1 -------------------------------------------
+        cWs[l + 1] = (g.T @ bar_h
+                      + jnp.einsum("jnw,jnv->wv", t_tl, bar_t)
+                      + jnp.einsum("jnw,jnv->wv", s_tl, bar_s))
+        cbs[l + 1] = jnp.sum(bar_h, axis=0)
+        bar_g = bar_h @ W.T
+        bar_tt = bar_t @ W.T
+        bar_st = bar_s @ W.T
+        # ---- activation stage l -----------------------------------------
+        e1 = p2 * h * al + p1                    # ∂(phi'·a)/∂a
+        e2 = p3 * h * (al * al) + 2.0 * p2 * al  # ∂(phi''·a²)/∂a
+        ca_rev.append(jnp.sum(bar_g * p1 * h)
+                      + jnp.sum(bar_tt * t * e1[None])
+                      + jnp.sum(bar_st * (tsel * tsel * e2[None]
+                                          + s * e1[None])))
+        bar_h = (bar_g * d1
+                 + jnp.sum(bar_tt * t, axis=0) * d2v
+                 + jnp.sum(bar_st * (tsel * tsel), axis=0) * (p3 * al ** 3)
+                 + jnp.sum(bar_st * s, axis=0) * d2v)
+        new_bar_t = bar_tt * d1[None]
+        if sel:
+            upd = bar_st * (2.0 * d2v[None]) * tsel
+            if full:
+                new_bar_t = new_bar_t + upd
+            else:
+                for k, j in enumerate(sel):
+                    new_bar_t = new_bar_t.at[j].add(upd[k])
+        bar_t = new_bar_t
+        bar_s = bar_st * d1[None]
+    # ---- input affine layer ---------------------------------------------
+    cx = bar_h @ Ws[0].T
+    cWs[0] = x.T @ bar_h + jnp.sum(bar_t, axis=1)
+    cbs[0] = jnp.sum(bar_h, axis=0)
+    ca = (jnp.stack(ca_rev[::-1]).astype(a.dtype) if ca_rev
+          else jnp.zeros((0,), a.dtype))
+    return cx, tuple(cWs), tuple(cbs), ca
+
+
+def pinn_mlp_ref2_vjp(x, Ws, bs, a, act="tanh", d2_dirs=None):
+    """Hand-derived closed-form VJP of :func:`pinn_mlp_ref2`.
+
+    Independent oracle for the fused Pallas backward (``pinn_mlp._kernel2_bwd``)
+    AND the compiled non-TPU backward fast path of ``ops.pinn_mlp_forward2``:
+    derived on paper from the forward-over-forward recurrence, never through
+    ``jax.vjp`` — so kernel parity tests validate against a second derivation,
+    not against the autodiff they replace.
+
+    Returns ``((u, du, d2u), vjp_fn)`` with
+    ``vjp_fn((ū, d̄u, d̄2u)) -> (x̄, W̄s, b̄s, ā)``.
+    """
+    from repro.kernels.pinn_mlp import _act_quad
+
+    quad = _act_quad(act)
+    Ws, bs = tuple(Ws), tuple(bs)
+    outs, res = _ref2_impl(x, Ws, bs, a, quad[:3], d2_dirs, save=True)
+    return outs, lambda cts: _ref2_bwd(x, Ws, a, res, quad, d2_dirs, cts)
 
 
 def attention_ref(q, k, v, causal=True):

@@ -277,6 +277,159 @@ def test_forward2_custom_vjp_grads_match_autodiff():
         np.testing.assert_allclose(lf, lo, rtol=1e-4, atol=1e-4)
 
 
+# ---- hand-derived fused backward -------------------------------------------
+#
+# The backward correctness chain mirrors the forward one:
+#
+#     pallas _kernel2_bwd (interpret)  ==  ref._ref2_bwd (hand-derived, jnp)
+#                                      ==  jax.vjp(ref.pinn_mlp_ref2) (autodiff)
+#
+# ref.pinn_mlp_ref2_vjp is an INDEPENDENT closed-form derivation (no autodiff
+# anywhere), so agreement is two derivations meeting — not the kernel being
+# compared against the machinery it replaces.
+
+
+def _rand_cts(rng, shapes, dtype):
+    return tuple(jnp.asarray(rng.normal(0, 1, s), dtype) for s in shapes)
+
+
+def _vjp_bundle_check(act, d_in, width, depth, out, d2_dirs=None, n=40,
+                      block_n=32, rtol=1e-4, atol=1e-4):
+    """All three backwards agree on the same random cotangents."""
+    rng = np.random.default_rng(_seed("vjp", act, d_in, width, depth, d2_dirs))
+    Ws, bs, a = _mk_mlp(rng, d_in, width, depth, out, jnp.float32)
+    x = jnp.asarray(rng.uniform(-1, 1, (n, d_in)), jnp.float32)
+    shapes = ((n, out), (d_in, n, out), (d_in, n, out))
+    cts = _rand_cts(rng, shapes, jnp.float32)
+
+    # (1) independent hand derivation (closed form, no jax.vjp)
+    outs_hand, vjp_hand = ref.pinn_mlp_ref2_vjp(x, Ws, bs, a, act=act,
+                                                d2_dirs=d2_dirs)
+    g_hand = vjp_hand(cts)
+    # (2) autodiff of the reference recurrence
+    outs_auto, vjp_auto = jax.vjp(
+        lambda xx, W, b, aa: ref.pinn_mlp_ref2(xx, W, b, aa, act=act,
+                                               d2_dirs=d2_dirs),
+        x, tuple(Ws), tuple(bs), a)
+    g_auto = vjp_auto(cts)
+    # (3) the fused Pallas reverse kernel (interpret mode)
+    outs_pal, vjp_pal = jax.vjp(
+        lambda xx, W, b, aa: pinn_mlp_forward2(xx, W, b, aa, act=act,
+                                               block_n=block_n, interpret=True,
+                                               d2_dirs=d2_dirs, bwd="fused"),
+        x, tuple(Ws), tuple(bs), a)
+    g_pal = vjp_pal(cts)
+
+    for o_h, o_a, o_p in zip(outs_hand, outs_auto, outs_pal):
+        np.testing.assert_allclose(o_h, o_a, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(o_p), o_a, rtol=1e-5, atol=1e-5)
+    for l_h, l_a, l_p in zip(jax.tree.leaves(g_hand), jax.tree.leaves(g_auto),
+                             jax.tree.leaves(g_pal)):
+        # hand derivation vs autodiff: same math, different reduction order
+        np.testing.assert_allclose(l_h, l_a, rtol=rtol, atol=atol)
+        # acceptance bound: kernel vs hand-derived oracle <= 1e-5 relative
+        # (scaled by the cotangent magnitude per leaf)
+        scale = max(1.0, float(np.max(np.abs(l_h))))
+        np.testing.assert_allclose(np.asarray(l_p) / scale,
+                                   np.asarray(l_h) / scale,
+                                   rtol=1e-5, atol=1e-5)
+
+
+# tier-1 subset: every activation (narrow width — the padding edge) + one
+# pruned-direction case
+@pytest.mark.parametrize("act", ["tanh", "sin", "cos"])
+def test_bwd_parity_hand_vs_autodiff_vs_kernel(act):
+    _vjp_bundle_check(act, d_in=2, width=20, depth=3, out=1)
+
+
+def test_bwd_parity_pruned_dirs():
+    _vjp_bundle_check("tanh", d_in=2, width=20, depth=3, out=1, d2_dirs=(0,))
+
+
+# exhaustive backward sweep (run with `pytest -m kernel`): acts x widths
+# (incl. <128 padding and exact-lane) x d2_dirs subsets x input dims
+@pytest.mark.kernel
+@pytest.mark.parametrize("act", ["tanh", "sin", "cos"])
+@pytest.mark.parametrize("d_in,width,depth,out", [
+    (2, 16, 3, 1),    # narrow width — heavy lane padding
+    (2, 40, 8, 3),    # paper's Fig-4 center config
+    (3, 64, 5, 2),    # 3 input directions
+    (2, 128, 2, 1),   # exact lane width, no padding
+    (1, 33, 4, 1),    # single direction, odd width
+])
+@pytest.mark.parametrize("d2_dirs", [None, (0,), ()])
+def test_bwd_parity_sweep(act, d_in, width, depth, out, d2_dirs):
+    _vjp_bundle_check(act, d_in, width, depth, out, d2_dirs)
+
+
+def test_bwd_selector_roundtrip():
+    """bwd='fused' and bwd='ref' are the SAME gradient (up to float noise):
+    the selector changes the implementation, never the math."""
+    rng = np.random.default_rng(41)
+    Ws, bs, a = _mk_mlp(rng, 2, 24, 3, 1, jnp.float32)
+    x = jnp.asarray(rng.uniform(-1, 1, (40, 2)), jnp.float32)
+
+    def loss(Ws, bs, a, bwd):
+        u, du, d2u = pinn_mlp_forward2(x, Ws, bs, a, bwd=bwd)
+        return jnp.sum(u ** 2) + jnp.sum(du ** 2) + 0.1 * jnp.sum(d2u ** 2)
+
+    gf = jax.grad(loss, argnums=(0, 1, 2))(Ws, bs, a, "fused")
+    gr = jax.grad(loss, argnums=(0, 1, 2))(Ws, bs, a, "ref")
+    for lf, lr in zip(jax.tree.leaves(gf), jax.tree.leaves(gr)):
+        np.testing.assert_allclose(lf, lr, rtol=1e-4, atol=1e-5)
+    with pytest.raises(ValueError, match="backward path"):
+        loss(Ws, bs, a, "nope")
+
+
+def test_bwd_segments_megabatch_matches_separate():
+    """The fused backward composes with the segment megabatch entry."""
+    rng = np.random.default_rng(43)
+    Ws, bs, a = _mk_mlp(rng, 2, 20, 3, 1, jnp.float32)
+    xs = tuple(jnp.asarray(rng.uniform(-1, 1, (n, 2)), jnp.float32)
+               for n in (24, 9, 5))
+
+    def loss_seg(Ws, bs, a):
+        outs = ops.pinn_mlp_forward2_segments(xs, Ws, bs, a, interpret=True,
+                                              block_n=32, bwd="fused")
+        return sum(jnp.sum(u ** 2) + jnp.sum(du ** 2) + 0.1 * jnp.sum(d2u ** 2)
+                   for u, du, d2u in outs)
+
+    g = jax.grad(loss_seg, argnums=(0, 1, 2))(Ws, bs, a)
+    # oracle: independent hand-derived VJP per segment, summed
+    acc = None
+    for x in xs:
+        _, vjp = ref.pinn_mlp_ref2_vjp(x, Ws, bs, a)
+        u, du, d2u = ref.pinn_mlp_ref2(x, Ws, bs, a)
+        cts = (2.0 * u, 2.0 * du, 0.2 * d2u)
+        _, cW, cb, ca = vjp(cts)
+        gi = (cW, cb, ca)
+        acc = gi if acc is None else jax.tree.map(jnp.add, acc, gi)
+    for lf, lo in zip(jax.tree.leaves(g), jax.tree.leaves(acc)):
+        np.testing.assert_allclose(lf, lo, rtol=1e-4, atol=1e-4)
+
+
+def test_select_bwd_matches_static_act():
+    """The traced-code serving entry differentiates like the static-act path
+    for every code (hand-derived select backward)."""
+    rng = np.random.default_rng(47)
+    Ws, bs, a = _mk_mlp(rng, 2, 16, 2, 1, jnp.float32)
+    x = jnp.asarray(rng.uniform(-1, 1, (24, 2)), jnp.float32)
+    for code_v, act in ((0, "tanh"), (1, "sin"), (2, "cos")):
+        def loss_sel(Ws, bs, a):
+            u, du, d2u = ops.pinn_mlp_forward2_select(
+                x, Ws, bs, a, jnp.asarray(code_v, jnp.int32))
+            return jnp.sum(u ** 2) + jnp.sum(du ** 2) + 0.1 * jnp.sum(d2u ** 2)
+
+        def loss_ref(Ws, bs, a):
+            u, du, d2u = ref.pinn_mlp_ref2(x, Ws, bs, a, act=act)
+            return jnp.sum(u ** 2) + jnp.sum(du ** 2) + 0.1 * jnp.sum(d2u ** 2)
+
+        gs = jax.grad(loss_sel, argnums=(0, 1, 2))(Ws, bs, a)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(Ws, bs, a)
+        for l1, l2 in zip(jax.tree.leaves(gs), jax.tree.leaves(gr)):
+            np.testing.assert_allclose(l1, l2, rtol=2e-4, atol=2e-4)
+
+
 def test_pack_mlp_is_cse_d_within_one_jit_scope():
     """Satellite check: two fused calls on the SAME weights inside one jit
     compile to ONE packed weight stack (XLA CSE) — the padding 'prepare' step
