@@ -11,7 +11,9 @@ Train -> export -> serve (the paper's end product is the FIELD, not the
 checkpoint): ``--export DIR`` freezes the trained networks + geometry into a
 self-contained serve bundle, and ``--serve-demo`` loads it back and serves a
 dense K(x,y) grid through the stitched single-dispatch engine + caching
-frontend (see EXPERIMENTS.md §Serving).
+frontend (see EXPERIMENTS.md §Serving).  ``--supervised`` routes training
+through the fault-tolerant chunk supervisor with elastic ``--resume``
+(EXPERIMENTS.md §Robustness).
 """
 import argparse
 import sys
@@ -83,6 +85,13 @@ def main():
                     help="checkpoint directory for --save-every")
     ap.add_argument("--resume", default=None, metavar="DIR",
                     help="resume from the latest checkpoint under DIR")
+    ap.add_argument("--supervised", action="store_true",
+                    help="route training through the fault-tolerant chunk "
+                         "supervisor (checkpoints to --ckpt, recovers crashes "
+                         "and NaN divergence; --resume becomes elastic)")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="fault schedule for --supervised: comma-separated "
+                         "kind@chunk[:subdomain][*delay] items")
     ap.add_argument("--export", default=None, metavar="DIR",
                     help="freeze the trained field into a serve bundle")
     ap.add_argument("--serve-demo", action="store_true",
@@ -91,6 +100,8 @@ def main():
     args = ap.parse_args()
     if args.serve_demo and not args.export:
         ap.error("--serve-demo requires --export DIR")
+    if args.inject and not args.supervised:
+        ap.error("--inject requires --supervised")
 
     pde = HeatConduction2D()
     decomp = us_map_decomposition()
@@ -111,26 +122,49 @@ def main():
     )
     state = trainer.init(0)
     done = 0
-    if args.resume:
+    if args.resume and not args.supervised:
         state = restore_train_state(args.resume, state)
         done = int(state.step)
         print(f"[inverse] resumed from {args.resume} at step {done}")
     b = batch.device_arrays()
 
-    report_every = 250
-    t0 = time.time()
-    t_done = done
-    while done < args.steps:
-        n = min(max(args.chunk, 1), args.steps - done)
-        state, terms = trainer.run_chunk(state, b, n)
-        prev, done = done, done + n
-        if args.save_every and done // args.save_every > prev // args.save_every:
-            save_train_state(args.ckpt, state)
-        if done == args.steps or done // report_every > prev // report_every:
-            loss = float(np.asarray(terms["loss"])[-1].sum())
-            err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
-            print(f"[inverse] step {done:5d} loss={loss:9.4f} rel_L2(T,K)={err:.4f} "
-                  f"({(done - t_done)/(time.time()-t0):.1f} it/s)")
+    if args.supervised:
+        from repro.runtime import (FaultInjector, Supervisor, SupervisorConfig,
+                                   elastic_resume, parse_faults)
+
+        if args.resume:
+            state, _ = elastic_resume(args.resume, trainer, decomp)
+            done = int(np.asarray(state.step))
+            print(f"[inverse] elastic resume from {args.resume} at step {done}")
+        chunk = max(args.chunk, 1)
+        cfg_sup = SupervisorConfig(
+            chunk_steps=chunk,
+            ckpt_every_chunks=(max(1, args.save_every // chunk)
+                               if args.save_every else 1))
+        injector = (FaultInjector(parse_faults(args.inject))
+                    if args.inject else None)
+        sup = Supervisor(trainer, args.ckpt, cfg_sup, injector, decomp=decomp)
+        state, report = sup.run(state, b, args.steps)
+        for ev in report.events:
+            print(f"[supervisor] {ev}")
+        print(f"[supervisor] chunks={report.chunks} restarts={report.restarts}"
+              f" crashes={report.crashes} guard_trips={report.guard_trips} "
+              f"stragglers={report.stragglers}")
+    else:
+        report_every = 250
+        t0 = time.time()
+        t_done = done
+        while done < args.steps:
+            n = min(max(args.chunk, 1), args.steps - done)
+            state, terms = trainer.run_chunk(state, b, n)
+            prev, done = done, done + n
+            if args.save_every and done // args.save_every > prev // args.save_every:
+                save_train_state(args.ckpt, state)
+            if done == args.steps or done // report_every > prev // report_every:
+                loss = float(np.asarray(terms["loss"])[-1].sum())
+                err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
+                print(f"[inverse] step {done:5d} loss={loss:9.4f} rel_L2(T,K)={err:.4f} "
+                      f"({(done - t_done)/(time.time()-t0):.1f} it/s)")
 
     err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes, pde)
     print(f"[inverse] final rel L2 error (T, K stacked) vs exact: {err:.4f}")

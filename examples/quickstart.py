@@ -5,6 +5,14 @@ The end-to-end driver for the paper's workload: decompose (-1,1) x (0,1) into
 validate against the Cole-Hopf exact solution.
 
     PYTHONPATH=src python examples/quickstart.py [--steps 1500]
+
+With ``--supervised`` the run goes through the fault-tolerant chunk supervisor
+(EXPERIMENTS.md §Robustness): guarded chunks, crash/NaN recovery, and ELASTIC
+``--resume`` — a checkpoint taken at one ``--nx/--nt`` restarts at another via
+nearest-centroid parameter adoption.  ``--inject`` drives the fault matrix:
+
+    PYTHONPATH=src python examples/quickstart.py --supervised \\
+        --inject 'crash@1,nan_params@3:0'
 """
 import argparse
 import sys
@@ -41,7 +49,19 @@ def main():
                     help="checkpoint directory for --save-every")
     ap.add_argument("--resume", default=None, metavar="DIR",
                     help="resume from the latest checkpoint under DIR")
+    ap.add_argument("--supervised", action="store_true",
+                    help="route training through the fault-tolerant chunk "
+                         "supervisor: checkpoints to --ckpt, recovers crashes "
+                         "and NaN divergence, and makes --resume ELASTIC (the "
+                         "checkpoint may have been taken at a different "
+                         "--nx/--nt)")
+    ap.add_argument("--inject", default=None, metavar="SPEC",
+                    help="fault schedule for --supervised: comma-separated "
+                         "kind@chunk[:subdomain][*delay] items, e.g. "
+                         "'crash@1,nan_params@2:0,straggler@3*0.5'")
     args = ap.parse_args()
+    if args.inject and not args.supervised:
+        ap.error("--inject requires --supervised")
 
     pde = Burgers1D()
     decomp = CartesianDecomposition(((-1, 1), (0, 1)), args.nx, args.nt)
@@ -57,11 +77,42 @@ def main():
                                lrs=2e-3)
     state = trainer.init(0)
     done = 0
-    if args.resume:
+    if args.resume and not args.supervised:
         state = restore_train_state(args.resume, state)
         done = int(state.step)
         print(f"[quickstart] resumed from {args.resume} at step {done}")
     b = batch.device_arrays()
+
+    if args.supervised:
+        from repro.runtime import (FaultInjector, Supervisor, SupervisorConfig,
+                                   elastic_resume, parse_faults)
+
+        if args.resume:
+            state, meta = elastic_resume(args.resume, trainer, decomp)
+            done = int(np.asarray(state.step))
+            sig = (meta.get("supervisor") or {}).get("decomp") or {}
+            old_n = sig.get("n_sub", decomp.n_sub)
+            print(f"[quickstart] elastic resume from {args.resume} at step "
+                  f"{done} (checkpoint n_sub={old_n} -> {decomp.n_sub})")
+        chunk = max(args.chunk, 1)
+        cfg_sup = SupervisorConfig(
+            chunk_steps=chunk,
+            ckpt_every_chunks=(max(1, args.save_every // chunk)
+                               if args.save_every else 1))
+        injector = (FaultInjector(parse_faults(args.inject))
+                    if args.inject else None)
+        sup = Supervisor(trainer, args.ckpt, cfg_sup, injector, decomp=decomp)
+        state, report = sup.run(state, b, args.steps)
+        for ev in report.events:
+            print(f"[supervisor] {ev}")
+        print(f"[supervisor] chunks={report.chunks} restarts={report.restarts}"
+              f" crashes={report.crashes} guard_trips={report.guard_trips} "
+              f"stragglers={report.stragglers}")
+        err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes,
+                          pde)
+        print(f"[quickstart] final rel L2 error vs Cole-Hopf exact: {err:.4f}")
+        assert err < 0.5, "did not converge"
+        return
 
     report_every = 250
     t0 = time.time()

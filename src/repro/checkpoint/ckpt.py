@@ -40,6 +40,9 @@ def _flatten_with_paths(tree: Pytree):
 def save(root: str, step: int, tree: Pytree, metadata: dict | None = None, keep: int = 3) -> str:
     """Atomically write a checkpoint for ``step``; returns the checkpoint dir."""
     os.makedirs(root, exist_ok=True)
+    # a crash mid-save leaves its .tmp_step_* workdir behind; sweep orphans
+    # BEFORE creating our own (single-writer contract: one saver per root)
+    _sweep_orphan_tmps(root)
     paths, leaves = _flatten_with_paths(tree)
     treedef = jax.tree_util.tree_structure(tree)
     tmp = tempfile.mkdtemp(dir=root, prefix=f".tmp_step_{step}_")
@@ -78,8 +81,27 @@ def _gc(root: str, keep: int) -> None:
         shutil.rmtree(os.path.join(root, d), ignore_errors=True)
 
 
+def _sweep_orphan_tmps(root: str) -> None:
+    """Remove half-written ``.tmp_step_*`` dirs a crashed save left behind.
+
+    They are invisible to restore (everything scans for ``step_`` prefixes),
+    but they leak disk forever on a long-running job — swept on the next
+    ``save`` / ``latest_step``.  Assumes the single-writer contract: the only
+    live tmp dir belongs to a save() currently on this call stack, and save()
+    sweeps before creating it."""
+    try:
+        names = os.listdir(root)
+    except FileNotFoundError:
+        return
+    for d in names:
+        if d.startswith(".tmp_step_"):
+            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+
+
 def latest_step(root: str) -> int | None:
     ptr = os.path.join(root, "LATEST")
+    if os.path.isdir(root):
+        _sweep_orphan_tmps(root)
     if not os.path.exists(ptr):
         return None
     with open(ptr) as f:

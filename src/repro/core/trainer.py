@@ -30,6 +30,19 @@ enters the network exactly once: ``losses.network_eval`` megabatches residual +
 interface + data points, ``jax.vjp`` captures that single forward so the
 exchange payload and the differentiated loss share it, and the assembled loss's
 cotangents chain back through the saved VJP.
+
+Guarded chunks (EXPERIMENTS.md §Robustness): every trainer also exposes
+``run_chunk_guarded(state, batch, steps, lr_scale)`` — the same scanned
+single-dispatch driver with an IN-GRAPH health guard in the scan body.  After
+each outer step the body checks that the per-subdomain losses and the updated
+parameters are finite; once any check trips, a ``lax.cond`` freezes the carried
+state for the remaining steps (early exit without breaking the static scan
+length, donation, or the one-entry-per-loss-eval contract).  The chunk returns
+``(state, terms, health)`` where ``health`` records the per-subdomain ok flags
+and the number of applied steps, so the supervisor (``runtime.supervisor``)
+can roll back to the last good checkpoint and retry with per-subdomain
+learning-rate backoff — ``lr_scale`` rides the dispatch as a plain argument,
+so backoff never recompiles.
 """
 from __future__ import annotations
 
@@ -71,6 +84,29 @@ class TrainState:
     params: Any
     opt: dict
     step: jax.Array
+
+
+# ------------------------------------------------------------- in-graph health
+
+def _sqnorm(tree) -> jax.Array:
+    """Scalar sum of squares over all leaves (f32 accumulation); NaN/Inf in any
+    leaf makes the result non-finite — ONE cheap reduction guards the whole
+    parameter pytree."""
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+               for x in jax.tree.leaves(tree))
+
+
+def _stacked_sqnorm(tree) -> jax.Array:
+    """(n_sub,) per-subdomain sum of squares over stacked (n_sub, ...) leaves."""
+    return sum(jnp.sum(jnp.square(x.astype(jnp.float32)),
+                       axis=tuple(range(1, x.ndim)))
+               for x in jax.tree.leaves(tree))
+
+
+def _nan_like(shapes):
+    """NaN-filled pytree matching a ``jax.eval_shape`` result — the frozen
+    branch's stand-in for the loss terms it did not compute."""
+    return jax.tree.map(lambda s: jnp.full(s.shape, jnp.nan, s.dtype), shapes)
 
 
 class _DDCommon:
@@ -164,13 +200,18 @@ class ReferenceTrainer(_DDCommon):
         self._chunk_const = jax.jit(self._run_chunk_const, static_argnums=(2,),
                                     donate_argnums=(0,))
         self._chunk_stacked = jax.jit(self._run_chunk_stacked, donate_argnums=(0,))
+        self._chunk_guarded = jax.jit(self._run_chunk_guarded, static_argnums=(2,),
+                                      donate_argnums=(0,))
 
-    def _outer_body(self, carry, batch: SubBatch):
+    def _outer_body(self, carry, batch: SubBatch, lrs=None):
         """One outer step (exchange + local_steps Adam updates) on stacked
         arrays.  ONE network entry per loss evaluation: ``jax.vjp`` captures
         the megabatched forward, the exchange payload is a slice of that SAME
         forward (no separate payload entry), and the assembled loss's
-        cotangents chain back through the saved VJP."""
+        cotangents chain back through the saved VJP.  ``lrs`` overrides the
+        per-subdomain learning rates (guarded chunks scale them for recovery
+        backoff)."""
+        lrs = self.lrs if lrs is None else lrs
         params, opt, step = carry
         wm = self.width_masks  # dict of (n_sub, w) or None (None = empty pytree: vmap ok)
         net_eval = lambda p: jax.vmap(self._net_eval)(p, self.act_codes, wm, batch)
@@ -195,7 +236,7 @@ class ReferenceTrainer(_DDCommon):
                 outs, vjp_fn = jax.vjp(net_eval, params)
             (_, terms), gouts = jax.value_and_grad(assemble_all, has_aux=True)(outs, recv)
             (grads,) = vjp_fn(gouts)
-            params, opt = adam_lib.adam_update(grads, opt, params, self.lrs, self.cfg.adam)
+            params, opt = adam_lib.adam_update(grads, opt, params, lrs, self.cfg.adam)
         return (params, opt, step + 1), terms
 
     def _step(self, state: TrainState, batch: SubBatch) -> tuple[TrainState, dict]:
@@ -231,6 +272,50 @@ class ReferenceTrainer(_DDCommon):
         if steps is None:
             return self._chunk_stacked(state, batch)
         return self._chunk_const(state, batch, steps)
+
+    # ------------------------------------------------------------ guarded chunk
+    def _guarded_body(self, carry, batch: SubBatch, lrs):
+        """Scan body with the in-graph health guard: run one outer step only
+        while every subdomain is healthy, then freeze the carry.  The live
+        branch IS ``_outer_body`` — same trace, same single network entry per
+        loss evaluation — so guarding never adds a dispatch."""
+        inner, ok_sub, good = carry
+        live = lambda c: self._outer_body(c, batch, lrs)
+        nan_terms = _nan_like(jax.eval_shape(live, inner)[1])
+        all_ok = jnp.all(ok_sub)
+        inner, terms = jax.lax.cond(all_ok, live, lambda c: (c, nan_terms), inner)
+        # health of the step just applied: finite per-subdomain loss AND finite
+        # updated params (catches NaN grads/moments the loss can't see yet)
+        healthy = (jnp.isfinite(terms["loss"])
+                   & jnp.isfinite(_stacked_sqnorm(inner[0])))
+        # after a trip the NaN terms would flag everyone — keep the trip-time
+        # ok vector so the supervisor sees WHICH subdomains diverged
+        ok_sub = jnp.where(all_ok, ok_sub & healthy, ok_sub)
+        return (inner, ok_sub, good + all_ok.astype(jnp.int32)), terms
+
+    def _run_chunk_guarded(self, state, batch, steps, lr_scale):
+        lrs = self.lrs * lr_scale
+        carry0 = ((state.params, state.opt, state.step),
+                  jnp.ones((self.topo.n_sub,), bool), jnp.zeros((), jnp.int32))
+        (inner, ok_sub, good), terms = jax.lax.scan(
+            lambda c, _: self._guarded_body(c, batch, lrs), carry0, None,
+            length=steps)
+        params, opt, step = inner
+        health = {"ok": jnp.all(ok_sub), "ok_sub": ok_sub, "good_steps": good}
+        return TrainState(params=params, opt=opt, step=step), terms, health
+
+    def run_chunk_guarded(self, state: TrainState, batch: SubBatch, steps: int,
+                          lr_scale=None):
+        """``run_chunk`` with the in-graph health guard — still ONE jitted
+        dispatch with ``state`` donated.  Returns ``(state, terms, health)``:
+        ``health["ok_sub"]`` (n_sub,) marks subdomains whose loss/params went
+        non-finite, ``health["good_steps"]`` counts applied outer steps (the
+        carry freezes once tripped; terms rows after the trip are NaN).
+        ``lr_scale`` (n_sub,) scales the per-subdomain learning rates without
+        recompiling (recovery backoff)."""
+        if lr_scale is None:
+            lr_scale = jnp.ones_like(self.lrs)
+        return self._chunk_guarded(state, batch, steps, jnp.asarray(lr_scale))
 
 
 class DistributedDDTrainer(_DDCommon):
@@ -356,6 +441,75 @@ class DistributedDDTrainer(_DDCommon):
             fn = self._chunk_cache[steps] = self._build_chunk(steps)
         return fn(state, batch)
 
+    # ------------------------------------------------------------ guarded chunk
+    def _build_guarded_chunk(self, steps: int):
+        spec = P("sub")
+
+        def local_chunk(params, opt, step, act_code, lr, lr_scale, wmask,
+                        batch: SubBatch):
+            sq = lambda t: jax.tree.map(lambda x: x[0], t)
+            p, o = sq(params), sq(opt)
+            ac, l, wm, b = act_code[0], lr[0] * lr_scale[0], sq(wmask), sq(batch)
+
+            def live(args):
+                p, o = args
+                p2, o2, t = self._local_outer_body(p, o, ac, l, wm, b)
+                return (p2, o2), t
+
+            nan_terms = _nan_like(jax.eval_shape(live, (p, o))[1])
+
+            def body(carry, _):
+                (p, o), ok, good = carry
+                # collective agreement: every shard freezes the moment ANY
+                # shard trips (one scalar pmin per step — the SPMD analogue of
+                # the reference trainer's jnp.all over the stacked ok vector)
+                all_ok = jax.lax.pmin(ok.astype(jnp.int32), "sub") > 0
+                (p, o), terms = jax.lax.cond(all_ok, live,
+                                             lambda a: (a, nan_terms), (p, o))
+                healthy = jnp.isfinite(terms["loss"]) & jnp.isfinite(_sqnorm(p))
+                ok = jnp.where(all_ok, ok & healthy, ok)
+                return ((p, o), ok, good + all_ok.astype(jnp.int32)), terms
+
+            carry0 = ((p, o), jnp.ones((), bool), jnp.zeros((), jnp.int32))
+            ((p, o), ok, good), terms = jax.lax.scan(body, carry0, None,
+                                                     length=steps)
+            unsq = lambda t: jax.tree.map(lambda x: x[None], t)
+            terms = jax.tree.map(lambda x: x[:, None], terms)
+            # good is collectively agreed -> identical on all shards (out P())
+            return unsq(p), unsq(o), step + good, ok[None], good, terms
+
+        shmapped = utils.shard_map(
+            local_chunk,
+            mesh=self.mesh,
+            in_specs=(spec, spec, P(), spec, spec, spec, spec, spec),
+            out_specs=(spec, spec, P(), spec, P(), P(None, "sub")),
+            check_vma=False,
+        )
+
+        def chunk(state: TrainState, batch: SubBatch, lr_scale):
+            p, o, s, ok, good, terms = shmapped(
+                state.params, state.opt, state.step, self.act_codes, self.lrs,
+                lr_scale, self.width_masks, batch,
+            )
+            health = {"ok": jnp.all(ok), "ok_sub": ok, "good_steps": good}
+            return TrainState(params=p, opt=o, step=s), terms, health
+
+        return jax.jit(chunk, donate_argnums=(0,))
+
+    def run_chunk_guarded(self, state: TrainState, batch: SubBatch, steps: int,
+                          lr_scale=None):
+        """Guarded ``run_chunk`` (see :meth:`ReferenceTrainer.run_chunk_guarded`)
+        on the SPMD path: each shard checks its own loss/params, a per-step
+        scalar ``pmin`` agrees the freeze collectively, and ``health["ok_sub"]``
+        comes back stitched (n_sub,).  Still one jitted dispatch, state
+        donated; ``lr_scale`` is sharded over "sub" like the learning rates."""
+        if lr_scale is None:
+            lr_scale = jnp.ones_like(self.lrs)
+        fn = self._chunk_cache.get(("guarded", steps))
+        if fn is None:
+            fn = self._chunk_cache[("guarded", steps)] = self._build_guarded_chunk(steps)
+        return fn(state, batch, jnp.asarray(lr_scale))
+
     def shard_batch(self, batch: SubBatch) -> SubBatch:
         sh = NamedSharding(self.mesh, P("sub"))
         return jax.tree.map(lambda x: jax.device_put(x, sh), batch)
@@ -426,11 +580,12 @@ class DataParallelTrainer:
                if self.compression else None)
         return {"params": params, "opt": opt, "err": err, "step": jnp.zeros((), jnp.int32)}
 
-    def _local_update(self, params, opt, err_l, batch: SubBatch):
+    def _local_update(self, params, opt, err_l, batch: SubBatch, lr_scale=None):
         """One allreduce-Adam update for ONE worker (err_l: this worker's
         error-feedback slice, no leading axis).  The fused path's
         vanilla_pinn_loss is already a single [res | data] megabatch entry."""
         comp = self.compression
+        lr = self.lr if lr_scale is None else self.lr * lr_scale
 
         def loss_fn(p):
             return losses.vanilla_pinn_loss(
@@ -443,7 +598,7 @@ class DataParallelTrainer:
             g, err_l = compress_decompress(g, err_l, comp)
         # the paper's distributed optimizer: allreduce-mean of loss gradients
         g = jax.lax.pmean(g, "sub")
-        new_params, new_opt = adam_lib.adam_update(g, opt, params, self.lr, self.adam_cfg)
+        new_params, new_opt = adam_lib.adam_update(g, opt, params, lr, self.adam_cfg)
         terms = jax.lax.pmean(terms, "sub")
         return new_params, new_opt, err_l, terms
 
@@ -520,6 +675,71 @@ class DataParallelTrainer:
         if fn is None:
             fn = self._chunk_cache[steps] = self._build_chunk(steps)
         return fn(state, batch)
+
+    # ------------------------------------------------------------ guarded chunk
+    def _build_guarded_chunk(self, steps: int):
+        comp = self.compression
+
+        def local_chunk(params, opt, err, step, lr_scale, batch: SubBatch):
+            batch = jax.tree.map(lambda x: x[0], batch)
+            err_l = jax.tree.map(lambda x: x[0], err) if comp is not None else err
+
+            def live(args):
+                params, opt, err_l = args
+                p, o, e, t = self._local_update(params, opt, err_l, batch,
+                                                lr_scale)
+                return (p, o, e), t
+
+            nan_terms = _nan_like(jax.eval_shape(live, (params, opt, err_l))[1])
+
+            def body(carry, _):
+                args, ok, good = carry
+                # params/loss are replicated after the allreduce, so every
+                # worker computes the same verdict — no extra collective
+                args, terms = jax.lax.cond(ok, live,
+                                           lambda a: (a, nan_terms), args)
+                healthy = jnp.isfinite(terms["loss"]) & jnp.isfinite(_sqnorm(args[0]))
+                ok, good = ok & healthy, good + ok.astype(jnp.int32)
+                return (args, ok, good), terms
+
+            carry0 = ((params, opt, err_l), jnp.ones((), bool),
+                      jnp.zeros((), jnp.int32))
+            ((params, opt, err_l), ok, good), terms = jax.lax.scan(
+                body, carry0, None, length=steps)
+            err_new = jax.tree.map(lambda x: x[None], err_l) if comp is not None else err
+            return params, opt, err_new, step + good, ok, good, terms
+
+        in_specs = self._specs()[:4] + (P(), P("sub"))
+        shmapped = utils.shard_map(
+            local_chunk,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=self._specs()[:4] + (P(), P(), P()),
+            check_vma=False,
+        )
+
+        def chunk(state, batch: SubBatch, lr_scale):
+            p, o, e, s, ok, good, terms = shmapped(
+                state["params"], state["opt"], state["err"], state["step"],
+                lr_scale, batch,
+            )
+            health = {"ok": ok, "ok_sub": ok, "good_steps": good}
+            return {"params": p, "opt": o, "err": e, "step": s}, terms, health
+
+        return jax.jit(chunk, donate_argnums=(0,))
+
+    def run_chunk_guarded(self, state, batch: SubBatch, steps: int,
+                          lr_scale=None):
+        """Guarded ``run_chunk``: in-graph non-finite loss/param detection with
+        ``lax.cond`` freeze (see :meth:`ReferenceTrainer.run_chunk_guarded`).
+        One network + replicated state means ``health["ok_sub"]`` is the scalar
+        ``ok`` and ``lr_scale`` is a replicated scalar."""
+        if lr_scale is None:
+            lr_scale = jnp.ones(())
+        fn = self._chunk_cache.get(("guarded", steps))
+        if fn is None:
+            fn = self._chunk_cache[("guarded", steps)] = self._build_guarded_chunk(steps)
+        return fn(state, batch, jnp.asarray(lr_scale, jnp.float32))
 
 
 # ------------------------------------------------------------------ checkpointing

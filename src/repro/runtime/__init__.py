@@ -1,2 +1,8 @@
-from repro.runtime.elastic import balanced_counts, remap_params
-from repro.runtime.failures import InjectedFailure, run_with_failures
+from repro.runtime.elastic import (CentroidSpec, balanced_counts, remap_params,
+                                   throughput_weights)
+from repro.runtime.failures import (FAULT_KINDS, Fault, FaultInjector,
+                                    InjectedFailure, inject_nan, parse_faults,
+                                    run_with_failures)
+from repro.runtime.supervisor import (Supervisor, SupervisorConfig,
+                                      SupervisorReport, decomp_signature,
+                                      elastic_resume)

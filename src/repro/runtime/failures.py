@@ -2,25 +2,52 @@
 
 Real multi-pod jobs die: preemptions, ICI flaps, kernel panics.  The recovery
 contract of this framework is *checkpoint/restart with bitwise continuation*.
-This module provides a deterministic harness that proves the contract on CPU:
+This module provides deterministic fault injection that proves the contract on
+CPU, at two granularities:
 
-``run_with_failures`` drives a training loop, killing it (by raising
-:class:`InjectedFailure` out of the step loop) at scheduled steps, then restarting
-from the latest checkpoint — exactly what a cluster supervisor does.  The test
-suite asserts the final state equals an uninterrupted run's state.
+* ``run_with_failures`` — the step-granular harness: drives a training loop,
+  killing it (by raising :class:`InjectedFailure` out of the step loop) at
+  scheduled steps, then restarting from the latest checkpoint — exactly what a
+  cluster supervisor does.  The test suite asserts the final state equals an
+  uninterrupted run's state.  For the LM path the same contract is exercised
+  through ``launch/train.py --resume`` (see tests/test_checkpoint.py).
 
-For the LM path the same contract is exercised through ``launch/train.py
---resume`` (see tests/test_checkpoint.py).
+* the **chunk-granular fault matrix** — :class:`Fault` / :class:`FaultInjector`
+  drive the PINN trainers' single-dispatch chunk world (one ``run_chunk`` ==
+  one scheduling unit), consumed by ``runtime.supervisor.Supervisor``.  Beyond
+  crashes it covers the failure modes a crash-only harness can't see:
+
+  ========== ============================================================
+  kind        effect at the scheduled chunk
+  ========== ============================================================
+  crash       :class:`InjectedFailure` AFTER the chunk computes but BEFORE
+              its checkpoint — the chunk's progress is lost (mid-chunk
+              preemption)
+  nan_params  NaN poked into one parameter leaf (one subdomain's slice of
+              the stacked axis when ``subdomain`` is set) — the in-graph
+              guard must trip within ONE chunk
+  nan_grads   NaN poked into the first-moment Adam buffer: the loss stays
+              finite but the NEXT update poisons the params — caught by
+              the guard's param-norm check, not the loss check
+  straggler   ``delay`` seconds of sleep before the chunk (simulated slow
+              worker; feeds the supervisor's walltime-weighted rebalance)
+  ========== ============================================================
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Callable, Iterable
+
+import numpy as np
 
 from repro.checkpoint import ckpt
 
 
 class InjectedFailure(RuntimeError):
     pass
+
+
+# ----------------------------------------------------------- step-granular
 
 
 def run_with_failures(
@@ -60,3 +87,93 @@ def run_with_failures(
             if restarts > max_restarts:
                 raise
             continue
+
+
+# ---------------------------------------------------------- chunk-granular
+
+FAULT_KINDS = ("crash", "nan_params", "nan_grads", "straggler")
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled fault.  ``chunk`` indexes the supervisor's chunk LAUNCHES
+    (attempts, so a retry consumed by an earlier fault shifts later indices by
+    design — schedules stay deterministic under recovery)."""
+
+    chunk: int
+    kind: str                    # one of FAULT_KINDS
+    subdomain: int | None = None  # nan_*: poison only this stacked slice
+    delay: float = 0.0            # straggler: seconds of injected sleep
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {FAULT_KINDS}")
+
+
+class FaultInjector:
+    """Deterministic chunk-granular fault schedule (consumed once)."""
+
+    def __init__(self, faults: Iterable[Fault] = ()):
+        self._due = sorted(faults, key=lambda f: f.chunk)
+        self.fired: list[Fault] = []
+
+    def take(self, chunk_idx: int) -> list[Fault]:
+        """Faults due at this chunk launch; each fires exactly once."""
+        due = [f for f in self._due if f.chunk == chunk_idx]
+        if due:
+            self._due = [f for f in self._due if f.chunk != chunk_idx]
+            self.fired.extend(due)
+        return due
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._due
+
+
+def parse_faults(spec: str) -> list[Fault]:
+    """Parse a CLI fault schedule: ``kind@chunk[:subdomain][*delay]`` items,
+    comma-separated — e.g. ``crash@1,nan_params@2:0,straggler@3*0.2``."""
+    out = []
+    for item in spec.split(","):
+        item = item.strip()
+        if not item:
+            continue
+        kind, _, rest = item.partition("@")
+        rest, _, delay = rest.partition("*")
+        rest, _, sub = rest.partition(":")
+        out.append(Fault(chunk=int(rest), kind=kind,
+                         subdomain=int(sub) if sub else None,
+                         delay=float(delay) if delay else 0.25))
+    return out
+
+
+def inject_nan(tree: dict, kind: str, subdomain: int | None = None) -> dict:
+    """Host-side NaN corruption of a state tree (``{"params", "opt", ...}``).
+
+    ``nan_params`` poisons the first parameter leaf; ``nan_grads`` poisons the
+    first Adam first-moment leaf (the next update turns the params non-finite,
+    which the in-graph guard's param check catches even though the loss it just
+    computed was finite).  With ``subdomain`` set, only that slice of the
+    stacked leading axis is poisoned, so guard attribution is testable."""
+    import jax
+    import jax.numpy as jnp
+
+    if kind not in ("nan_params", "nan_grads"):
+        raise ValueError(f"inject_nan: not a NaN fault: {kind!r}")
+    target = tree["params"] if kind == "nan_params" else tree["opt"]["m"]
+    leaves, treedef = jax.tree_util.tree_flatten(target)
+    x = np.array(leaves[0], copy=True)
+    if subdomain is not None and x.ndim >= 1 and subdomain < x.shape[0]:
+        x[(subdomain,) + (0,) * (x.ndim - 1)] = np.nan
+    else:
+        x.flat[0] = np.nan
+    leaves = [jnp.asarray(x)] + list(leaves[1:])
+    poisoned = jax.tree_util.tree_unflatten(treedef, leaves)
+    out = dict(tree)
+    if kind == "nan_params":
+        out["params"] = poisoned
+    else:
+        out["opt"] = dict(tree["opt"])
+        out["opt"]["m"] = poisoned
+    return out

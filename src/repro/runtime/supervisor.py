@@ -1,0 +1,312 @@
+"""Chunk-level training supervisor: guarded chunks, rollback, elastic restart.
+
+The paper's premise is long-running distributed DD-PINN jobs; at that scale
+restarts are the common case.  This module is the production control loop that
+sits ABOVE the trainers' single-dispatch chunk drivers and below nothing — it
+is what a cluster job actually runs:
+
+::
+
+                      +--------------------------- retry (lr backoff) ---+
+                      v                                                  |
+    init/resume -> [run chunk (guarded, 1 dispatch)] -- guard trip ------+
+         ^            | ok                            \\-- InjectedFailure
+         |            v                                   (crash): restore,
+         |         [checkpoint cadence + metadata]        retry at full lr
+         |            |
+         +- elastic --+   (n_old != n_new: nearest-centroid remap,
+            restart        fresh moments, Adam count from metadata)
+
+Design decisions:
+
+* **Health lives in-graph.**  ``trainer.run_chunk_guarded`` detects non-finite
+  loss/params inside the ``lax.scan`` body and freezes the carried state via
+  ``lax.cond`` — the supervisor only ever sees one dispatch per chunk and a
+  (n_sub,) verdict.  No per-step host sync, no donation break.
+* **Crash vs divergence are different failures.**  A crash
+  (:class:`~repro.runtime.failures.InjectedFailure`, i.e. preemption) restores
+  the last good checkpoint and retries AT FULL learning rate — replaying the
+  identical chunk reproduces the uninterrupted trajectory bitwise (tested).  A
+  guard trip is a NUMERICS failure: the retry applies per-subdomain
+  learning-rate backoff (the paper's per-subdomain hparam freedom, applied to
+  recovery) to exactly the subdomains whose loss/params went non-finite.
+* **Backoff never recompiles.**  ``lr_scale`` is a plain (n_sub,) argument of
+  the guarded dispatch.
+* **Elastic resume is metadata-driven.**  Every checkpoint carries the
+  decomposition signature (n_sub + centroids), the restart/backoff state, and
+  the Adam step count; :func:`elastic_resume` restores a checkpoint taken at
+  ``n_old`` subdomains into a trainer built for ``n_new`` via nearest-centroid
+  :func:`~repro.runtime.elastic.remap_params`, with fresh moments and the
+  preserved per-subdomain Adam counts.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.optim import adam as adam_lib
+from repro.runtime import elastic
+from repro.runtime.failures import FaultInjector, InjectedFailure, inject_nan
+
+
+@dataclass(frozen=True)
+class SupervisorConfig:
+    chunk_steps: int = 100          # outer steps per guarded dispatch
+    ckpt_every_chunks: int = 1      # checkpoint cadence, in committed chunks
+    keep: int = 3                   # keep-last-k checkpoints
+    max_restarts: int = 8           # total rollback budget (crash + guard)
+    lr_backoff: float = 0.5         # per-subdomain lr scale on a guard trip
+    min_lr_scale: float = 1e-3      # give up backing off below this
+    walltime_window: int = 16       # chunk walltimes kept in ckpt metadata
+
+
+@dataclass
+class SupervisorReport:
+    chunks: int = 0                 # committed chunks
+    restarts: int = 0               # rollbacks performed (crash + guard)
+    crashes: int = 0                # InjectedFailure recoveries
+    guard_trips: int = 0            # in-graph guard recoveries
+    stragglers: int = 0             # straggler faults absorbed
+    walltimes: list = field(default_factory=list)   # committed-chunk seconds
+    recovery_s: list = field(default_factory=list)  # rollback->retried latency
+    events: list = field(default_factory=list)      # human-readable log
+
+    def as_dict(self) -> dict:
+        return {k: (list(v) if isinstance(v, list) else v)
+                for k, v in self.__dict__.items()}
+
+
+def _as_tree(state) -> dict:
+    """Trainer state -> checkpointable tree.  TrainState (Reference /
+    Distributed) and the DataParallel dict share the {"params","opt","step"}
+    layout, so supervisor checkpoints stay interchangeable with
+    ``save_train_state`` / ``restore_train_state``."""
+    if isinstance(state, dict):
+        return state
+    return {"params": state.params, "opt": state.opt, "step": state.step}
+
+
+def _from_tree(tree: dict, like):
+    if isinstance(like, dict):
+        return tree
+    from repro.core.trainer import TrainState
+
+    return TrainState(params=tree["params"], opt=tree["opt"], step=tree["step"])
+
+
+def _adam_count(tree: dict):
+    c = np.asarray(tree["opt"]["count"])
+    return c.tolist() if c.ndim else int(c)
+
+
+def decomp_signature(decomp) -> dict:
+    """What elastic restart needs to survive in metadata: the subdomain count
+    and centroids (nearest-centroid remap needs nothing else)."""
+    return {
+        "n_sub": decomp.n_sub,
+        "family": type(decomp).__name__,
+        "centroids": [[float(x) for x in decomp.centroid(q)]
+                      for q in range(decomp.n_sub)],
+    }
+
+
+class Supervisor:
+    """Drive a trainer's guarded chunks with rollback, backoff and checkpoints.
+
+    ``trainer`` is any of the three trainers (each exposes
+    ``run_chunk_guarded``); ``root`` is the checkpoint directory; ``injector``
+    is an optional chunk-granular :class:`FaultInjector` (tests/benchmarks);
+    ``decomp`` (optional) stamps the decomposition signature into checkpoint
+    metadata so the run can restart elastically.
+    """
+
+    def __init__(self, trainer, root: str, cfg: SupervisorConfig = SupervisorConfig(),
+                 injector: FaultInjector | None = None, decomp=None):
+        self.trainer, self.root, self.cfg = trainer, str(root), cfg
+        self.injector = injector or FaultInjector()
+        self.decomp = decomp
+        self.lr_scale: np.ndarray | None = None   # lazy: shape from health
+        self.report = SupervisorReport()
+        self._restarts = 0
+
+    # ------------------------------------------------------------- checkpoint
+    def _metadata(self, state_tree: dict) -> dict:
+        return {"supervisor": {
+            "restarts": self._restarts,
+            "lr_scale": (None if self.lr_scale is None
+                         else np.asarray(self.lr_scale).tolist()),
+            "adam_count": _adam_count(state_tree),
+            "chunk_walltimes": self.report.walltimes[-self.cfg.walltime_window:],
+            "decomp": decomp_signature(self.decomp) if self.decomp else None,
+        }}
+
+    def _save(self, state) -> None:
+        tree = _as_tree(state)
+        ckpt.save(self.root, int(np.asarray(tree["step"])), tree,
+                  metadata=self._metadata(tree), keep=self.cfg.keep)
+
+    def _rollback(self, like) -> object:
+        self._restarts += 1
+        self.report.restarts += 1
+        if self._restarts > self.cfg.max_restarts:
+            raise RuntimeError(
+                f"supervisor: restart budget exhausted "
+                f"({self.cfg.max_restarts}); last events: {self.report.events[-4:]}")
+        tree, _ = ckpt.restore(self.root, _as_tree(like))
+        tree = jax.tree.map(jnp.asarray, tree)
+        return _from_tree(tree, like)
+
+    # ---------------------------------------------------------------- backoff
+    def _apply_backoff(self, health: dict) -> None:
+        ok_sub = np.atleast_1d(np.asarray(health["ok_sub"]))
+        if self.lr_scale is None:
+            self.lr_scale = np.ones(ok_sub.shape, np.float32)
+        scale = np.where(ok_sub, 1.0, self.cfg.lr_backoff).astype(np.float32)
+        self.lr_scale = self.lr_scale * scale
+        if (self.lr_scale < self.cfg.min_lr_scale).any():
+            raise RuntimeError(
+                "supervisor: lr backoff hit the floor "
+                f"({self.cfg.min_lr_scale}) without recovering — "
+                f"lr_scale={self.lr_scale.tolist()}")
+
+    def _lr_scale_arg(self):
+        if self.lr_scale is None:
+            return None
+        ls = jnp.asarray(self.lr_scale)
+        # DataParallel's guard is scalar-shaped; collapse a broadcast vector
+        return ls if ls.shape else ls.reshape(-1)
+
+    # -------------------------------------------------------------- main loop
+    def run(self, state, batch, total_steps: int):
+        """Train to ``total_steps``, surviving crashes and divergence.
+
+        Returns ``(state, report)``.  ``state`` follows the trainer's own state
+        type and donation contract (rebind, never reuse the argument)."""
+        cfg, tr = self.cfg, self.trainer
+        done = int(np.asarray(_as_tree(state)["step"]))
+        if ckpt.latest_step(self.root) is None:
+            self._save(state)   # the first rollback needs a target
+        attempt = 0
+        committed = 0
+        while done < total_steps:
+            n = min(cfg.chunk_steps, total_steps - done)
+            faults = self.injector.take(attempt)
+            attempt += 1
+            t0 = time.perf_counter()
+            try:
+                for f in faults:
+                    if f.kind == "straggler":
+                        self.report.stragglers += 1
+                        self.report.events.append(
+                            f"straggler +{f.delay:.2f}s at chunk {attempt - 1}")
+                        time.sleep(f.delay)
+                    elif f.kind in ("nan_params", "nan_grads"):
+                        self.report.events.append(
+                            f"{f.kind} injected at chunk {attempt - 1} "
+                            f"(subdomain {f.subdomain})")
+                        state = _from_tree(
+                            inject_nan(_as_tree(state), f.kind, f.subdomain),
+                            state)
+                state, terms, health = tr.run_chunk_guarded(
+                    state, batch, n, self._lr_scale_arg())
+                for f in faults:
+                    if f.kind == "crash":
+                        # mid-chunk preemption: the chunk computed but its
+                        # progress dies before the checkpoint
+                        raise InjectedFailure(
+                            f"injected crash at chunk {attempt - 1}")
+            except InjectedFailure as e:
+                self.report.crashes += 1
+                self.report.events.append(str(e))
+                t_r = time.perf_counter()
+                state = self._rollback(state)
+                self.report.recovery_s.append(time.perf_counter() - t_r)
+                done = int(np.asarray(_as_tree(state)["step"]))
+                continue
+            if not bool(health["ok"]):
+                bad = np.flatnonzero(~np.atleast_1d(np.asarray(health["ok_sub"])))
+                self.report.guard_trips += 1
+                self.report.events.append(
+                    f"guard trip at chunk {attempt - 1}: subdomains "
+                    f"{bad.tolist()} non-finite after "
+                    f"{int(health['good_steps'])} steps — rolling back with "
+                    f"lr backoff x{cfg.lr_backoff}")
+                self._apply_backoff(health)
+                t_r = time.perf_counter()
+                state = self._rollback(state)
+                self.report.recovery_s.append(time.perf_counter() - t_r)
+                done = int(np.asarray(_as_tree(state)["step"]))
+                continue
+            # committed
+            done += n
+            committed += 1
+            self.report.chunks += 1
+            self.report.walltimes.append(time.perf_counter() - t0)
+            if committed % cfg.ckpt_every_chunks == 0 or done >= total_steps:
+                self._save(state)
+        return state, self.report
+
+    # ------------------------------------------------------------- rebalance
+    def rebalance_counts(self, counts, per_sub_walltimes=None) -> list[int]:
+        """Straggler-aware point counts for the next (re-)decomposition.
+
+        With measured per-subdomain chunk walltimes (per-rank timers on a real
+        multi-host run, or the fault injector's straggler schedule in tests)
+        the budget is reallocated proportionally to measured throughput —
+        paper §7.6's idle-worker fix.  Without them, plain leveling."""
+        counts = [int(c) for c in counts]
+        if per_sub_walltimes is None:
+            return elastic.balanced_counts(counts)
+        return elastic.balanced_counts(
+            counts, elastic.throughput_weights(counts, per_sub_walltimes))
+
+
+# ------------------------------------------------------------ elastic resume
+
+def elastic_resume(root: str, trainer, decomp, state=None):
+    """Restore the latest supervisor checkpoint into ``trainer`` — which may be
+    decomposed into a DIFFERENT number of subdomains than the checkpoint.
+
+    Same ``n_sub`` (centroids immaterial): plain bitwise restore.  Different
+    ``n_sub``: nearest-centroid :func:`~repro.runtime.elastic.remap_params`
+    from the checkpoint metadata's centroid signature, optimizer moments reset,
+    per-subdomain Adam step counts and the global step preserved via metadata
+    (so bias correction and lr schedules continue instead of restarting cold).
+
+    Returns ``(state, metadata)``.  ``state`` template defaults to
+    ``trainer.init(0)``."""
+    like = state if state is not None else trainer.init(0)
+    like_tree = _as_tree(like)
+    manifest_leaves, manifest = ckpt.raw_leaves(root)
+    meta = manifest["metadata"]
+    sup = meta.get("supervisor", {})
+    sig = sup.get("decomp")
+    n_new = decomp.n_sub
+
+    if sig is None or int(sig["n_sub"]) == n_new:
+        tree, _ = ckpt.restore(root, like_tree)
+        tree = jax.tree.map(jnp.asarray, tree)
+        return _from_tree(tree, like), meta
+
+    # paths are shape-agnostic, so restore hands back the OLD stacked leaves
+    old_tree, _ = ckpt.restore(root, like_tree)
+    old_spec = elastic.CentroidSpec(sig["centroids"])
+    new_params, src = elastic.remap_params(old_tree["params"], old_spec, decomp)
+    opt = adam_lib.init_adam(new_params)
+    # Adam step count preserved via metadata (per remapped subdomain when the
+    # trainer keeps a stacked count vector)
+    count = np.asarray(sup.get("adam_count", np.asarray(old_tree["opt"]["count"])))
+    like_count = np.asarray(like_tree["opt"]["count"])
+    if like_count.ndim == 1:
+        count = count[src] if count.ndim == 1 else np.full(n_new, count)
+        opt["count"] = jnp.asarray(count.astype(np.int32))
+    else:
+        opt["count"] = jnp.asarray(np.int32(count.max() if count.ndim else count))
+    tree = {"params": new_params, "opt": opt,
+            "step": jnp.asarray(np.asarray(old_tree["step"]))}
+    return _from_tree(tree, like), meta

@@ -11,11 +11,17 @@ frontend fixes both without threads or external deps:
 * **LRU result cache** — keyed on the query-cloud signature (bytes + shape +
   order); a repeated grid is answered from memory with the BITWISE-identical
   arrays of the first evaluation, no device dispatch;
+* **deadline flush** — with ``max_queue_age`` set, the oldest queued request is
+  never left waiting for batch-mates beyond the deadline: ``submit``/``poll``/
+  ``result`` flush the queue once its head ages out (clock injectable for
+  tests), so a lone query is served within one deadline of any frontend
+  activity;
 * **counters** — requests / points / hit rate / dispatches / evaluation
   seconds, for the throughput benchmark and ops dashboards.
 
 Usage: ``submit() ... flush() ... result()`` for explicit microbatching, or
-``query()`` as the one-shot convenience (submit + flush + result).
+``query()`` as the one-shot convenience (submit + flush + result).  Serving
+loops with ``max_queue_age`` should call ``poll()`` on their idle path.
 """
 from __future__ import annotations
 
@@ -35,18 +41,23 @@ def _signature(pts: np.ndarray, order: int) -> tuple:
 
 class ServeFrontend:
     def __init__(self, engine: FieldEngine, order: int = 2,
-                 max_batch: int = 16384, cache_size: int = 64):
+                 max_batch: int = 16384, cache_size: int = 64,
+                 max_queue_age: float | None = None,
+                 clock=time.monotonic):
         self.engine = engine
         self.order = order
         self.max_batch = max_batch
         self.cache_size = cache_size
+        self.max_queue_age = max_queue_age
+        self._clock = clock
         self._cache: OrderedDict[tuple, dict] = OrderedDict()
-        self._pending: list[tuple[int, np.ndarray, tuple]] = []
+        self._pending: list[tuple[int, np.ndarray, tuple, float]] = []
         self._results: dict[int, dict] = {}
         self._next_ticket = 0
         self.counters = {"requests": 0, "points": 0, "cache_hits": 0,
                          "cache_misses": 0, "dispatches": 0,
-                         "dispatched_points": 0, "eval_seconds": 0.0}
+                         "dispatched_points": 0, "eval_seconds": 0.0,
+                         "deadline_flushes": 0}
 
     # ------------------------------------------------------------- caching
     def _cache_get(self, key: tuple) -> dict | None:
@@ -78,8 +89,25 @@ class ServeFrontend:
             self._results[ticket] = cached
         else:
             self.counters["cache_misses"] += 1
-            self._pending.append((ticket, pts, key))
+            self._pending.append((ticket, pts, key, self._clock()))
+        self.poll()
         return ticket
+
+    # ------------------------------------------------------------- deadline
+    def _deadline_due(self) -> bool:
+        return (self.max_queue_age is not None and bool(self._pending)
+                and self._clock() - self._pending[0][3] >= self.max_queue_age)
+
+    def poll(self) -> bool:
+        """Flush iff the OLDEST queued request has waited ``max_queue_age`` —
+        the anti-starvation path: a lone query with no batch-mates is served at
+        the next frontend activity (submit/result/poll) past its deadline
+        instead of waiting for the queue to fill.  Returns True if it flushed."""
+        if not self._deadline_due():
+            return False
+        self.counters["deadline_flushes"] += 1
+        self.flush()
+        return True
 
     def flush(self) -> None:
         """Evaluate queued requests in microbatches of <= ``max_batch`` points.
@@ -91,7 +119,7 @@ class ServeFrontend:
         """
         pending, self._pending = self._pending, []
         by_key: OrderedDict[tuple, list] = OrderedDict()
-        for ticket, pts, key in pending:
+        for ticket, pts, key, _enq in pending:
             by_key.setdefault(key, [ticket, pts])
             if by_key[key][0] != ticket:
                 by_key[key].append(ticket)
@@ -112,8 +140,9 @@ class ServeFrontend:
                 out = self.engine.evaluate(cloud, order=self.order)
                 self.counters["eval_seconds"] += time.perf_counter() - t0
             except Exception:
+                now = self._clock()
                 for key, pts, tickets in batch + unique[i:]:
-                    self._pending.extend((t, pts, key) for t in tickets)
+                    self._pending.extend((t, pts, key, now) for t in tickets)
                 raise
             self.counters["dispatches"] += 1
             self.counters["dispatched_points"] += len(cloud)
@@ -135,6 +164,7 @@ class ServeFrontend:
                     self._results[t] = res
 
     def result(self, ticket: int) -> dict:
+        self.poll()
         return self._results.pop(ticket)
 
     def query(self, pts) -> dict:

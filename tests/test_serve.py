@@ -294,6 +294,41 @@ def test_query_cloud_shape_validated():
     assert route(dec, np.array([0.5, 0.5])).pts.shape == (1, 2)  # single point ok
 
 
+def test_frontend_deadline_flush_stubbed_clock():
+    """max_queue_age: the oldest queued request is flushed once it ages out —
+    driven by an injected monotonic clock, so no real sleeping."""
+    bundle = _cart_bundle()
+    eng = FieldEngine(bundle)
+    now = [0.0]
+    fe = ServeFrontend(eng, order=1, max_queue_age=1.0, clock=lambda: now[0])
+    rng = np.random.default_rng(10)
+    a = rng.uniform([-1, 0], [1, 1], size=(8, 2))
+    ta = fe.submit(a)
+    d0 = eng.n_dispatches
+    now[0] = 0.5
+    assert not fe.poll() and eng.n_dispatches == d0   # under the deadline: queued
+    now[0] = 1.0
+    assert fe.poll() and eng.n_dispatches == d0 + 1   # head aged out: flushed
+    assert sorted(fe.result(ta)) == ["flux", "grad_u", "u"]
+    assert fe.stats()["deadline_flushes"] == 1
+
+    # submit() itself triggers the flush when the queue HEAD (not the new
+    # request) is past the deadline — and both ride one dispatch
+    now[0] = 2.0
+    tb = fe.submit(rng.uniform([-1, 0], [1, 1], size=(4, 2)))
+    now[0] = 3.5
+    d1 = eng.n_dispatches
+    tc = fe.submit(rng.uniform([-1, 0], [1, 1], size=(4, 2)))
+    assert eng.n_dispatches == d1 + 1
+    fe.result(tb), fe.result(tc)
+    assert fe.stats()["deadline_flushes"] == 2
+
+    # no deadline configured: poll never force-flushes
+    fe2 = ServeFrontend(eng, order=1)
+    fe2.submit(a)
+    assert not fe2.poll() and len(fe2._pending) == 1
+
+
 def test_frontend_lru_eviction():
     bundle = _cart_bundle()
     fe = ServeFrontend(FieldEngine(bundle), order=1, cache_size=2)
