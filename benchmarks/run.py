@@ -24,17 +24,18 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig6,fig8,fig9,table2,fig13,serve,"
-                         "ft,roofline")
+                         "slo,ft,roofline")
     ap.add_argument("--quick", action="store_true", help="fewer sizes/iters")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-fast subset: tiny fig4 jvp-vs-pallas + "
                          "run_chunk e2e + supervisor crash/NaN recovery + "
-                         "roofline")
+                         "serve-SLO clean/faulted acceptance + roofline")
     args = ap.parse_args()
 
     from benchmarks import (fig4_cost_profile, fig6_comp_comm, fig8_weak_scaling,
                             fig9_strong_scaling, fig13_inverse, ft_overhead,
-                            roofline, serve_throughput, table2_spacetime)
+                            roofline, serve_slo, serve_throughput,
+                            table2_spacetime)
 
     if args.smoke:
         # the pallas fig4 pass exercises BOTH custom-VJP backwards (fused
@@ -47,6 +48,10 @@ def main() -> None:
         # supervisor recovery acceptance: one crash (bitwise replay) + one NaN
         # (guard trip -> backoff -> finite completion)
         rows += ft_overhead.recovery_smoke_rows()
+        # serve-SLO acceptance: Poisson load, clean + injected fault matrix;
+        # FAILS if any ticket is lost / the queue wedges / goodput under
+        # faults drops below the floor
+        rows += serve_slo.slo_smoke_rows()
         rows += roofline.residual_rows("both")
         emit(rows)
         return
@@ -63,6 +68,7 @@ def main() -> None:
         "table2": lambda: table2_spacetime.run(iters=3 if quick else 5),
         "fig13": lambda: fig13_inverse.run(iters=3 if quick else 5),
         "serve": lambda: serve_throughput.run(iters=3 if quick else 5),
+        "slo": lambda: serve_slo.run(smoke=quick),
         "ft": lambda: ft_overhead.run(iters=3 if quick else 10),
         "roofline": roofline.run,
     }

@@ -1,0 +1,217 @@
+"""Resilient PINN field-serving process (the paper's §7.6 field as a service).
+
+  python -m repro.launch.serve_field --bundle exported_dir --rate 50 \
+      --duration 10 --deadline 0.5
+
+Drives a :class:`~repro.serve.resilience.ResilientFrontend` over an exported
+field bundle (or a built-in demo bundle) under Poisson-arrival traffic, with
+the full production lifecycle:
+
+* **health/readiness heartbeat** — one JSON line per ``--heartbeat`` seconds
+  on stderr (breaker state, queue pressure, ladder level); ``--status-file``
+  additionally publishes the same snapshot atomically for external probes
+  (a readiness check is ``json.load(status)["ready"]``);
+* **graceful draining** — SIGINT/SIGTERM (or the end of ``--duration``) stops
+  admission (late submits are answered ``shed: draining``), flushes every
+  queued request, then prints a final JSON report;
+* **fault injection** — ``--faults engine-raise@3,slow-engine@7*0.2,...``
+  wraps the engine in the serve-side fault matrix
+  (:class:`repro.runtime.failures.FaultyEngine`) so the resilience ladder can
+  be exercised end to end in a real process.
+
+Exit code 0 iff every admitted ticket was answered (the resilience
+invariant).  NOTE: this serves PINN *fields*; the LLM decoding scaffold lives
+in :mod:`repro.launch.serve`.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import signal
+import sys
+import time
+
+import numpy as np
+
+
+def _demo_bundle(kind: str = "usmap", seed: int = 0):
+    """In-process demo bundles so the server runs without a prior export."""
+    import jax
+    from repro.core import CartesianDecomposition, us_map_decomposition
+    from repro.core.nets import MLPConfig, SubdomainModelConfig, stacked_init
+    from repro.core.pdes import Burgers1D, HeatConduction2D
+    from repro.serve import FieldBundle
+
+    if kind == "cart":
+        dec = CartesianDecomposition(((-1, 1), (0, 1)), 2, 2)
+        cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 12, 2)})
+        params, codes = stacked_init(cfg, dec.n_sub, jax.random.PRNGKey(seed))
+        return FieldBundle(model_cfg=cfg, params=params, decomp=dec,
+                           act_codes=np.asarray(codes), pde=Burgers1D())
+    dec = us_map_decomposition()
+    acts = ["tanh", "sin", "cos", "tanh", "sin", "cos", "tanh", "sin",
+            "cos", "tanh"]
+    cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 24, 3),
+                                     "k": MLPConfig(2, 1, 24, 3)})
+    params, codes = stacked_init(cfg, dec.n_sub, jax.random.PRNGKey(seed),
+                                 acts)
+    return FieldBundle(model_cfg=cfg, params=params, decomp=dec,
+                       act_codes=np.asarray(codes), pde=HeatConduction2D())
+
+
+def _cloud_sampler(decomp, seed: int):
+    """Workload mix: mostly fresh random clouds, ~30% repeated dashboard
+    grids (cache-hit traffic), sizes spanning two orders of magnitude."""
+    rng = np.random.default_rng(seed)
+    if getattr(decomp, "polygons", None) is not None:
+        verts = np.concatenate(decomp.polygons)
+        lo, hi = verts.min(axis=0), verts.max(axis=0)
+    else:
+        lo = np.array([b[0] for b in decomp.bounds], float)
+        hi = np.array([b[1] for b in decomp.bounds], float)
+    side = 16
+    gx, gy = np.meshgrid(np.linspace(lo[0], hi[0], side),
+                         np.linspace(lo[1], hi[1], side))
+    dashboards = [np.stack([gx.ravel(), gy.ravel()], axis=1)]
+
+    def sample():
+        if rng.uniform() < 0.3:
+            return dashboards[0]
+        n = int(rng.choice((32, 128, 512)))
+        return rng.uniform(lo, hi, size=(n, 2))
+
+    return sample
+
+
+def _write_status(path: str, payload: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)   # atomic: probes never read a torn file
+
+
+def run_server(frontend, sample_cloud, *, rate: float, duration: float,
+               deadline: float | None = None, heartbeat: float = 1.0,
+               status_file: str | None = None, seed: int = 0,
+               max_requests: int | None = None,
+               clock=time.monotonic, sleep=time.sleep) -> dict:
+    """The serving loop: Poisson admission -> poll/flush -> heartbeat ->
+    drain.  Returns the final report dict (also printed as JSON)."""
+    rng = np.random.default_rng(seed + 1)
+    stop = {"sig": None}
+
+    def _on_signal(signum, _frame):
+        stop["sig"] = signum
+
+    old = {s: signal.signal(s, _on_signal)
+           for s in (signal.SIGINT, signal.SIGTERM)}
+    tickets: list[int] = []
+    t0 = clock()
+    next_arrival, next_beat = t0, t0
+    try:
+        while stop["sig"] is None and clock() - t0 < duration and \
+                (max_requests is None or len(tickets) < max_requests):
+            now = clock()
+            if now >= next_arrival:
+                tickets.append(frontend.submit(sample_cloud(),
+                                               deadline=deadline))
+                next_arrival += rng.exponential(1.0 / rate)
+            else:
+                frontend.poll()
+                sleep(min(max(next_arrival - now, 0.0), 0.005))
+            if now >= next_beat:
+                h = frontend.health()
+                print(json.dumps({"t": round(now - t0, 3), **h}),
+                      file=sys.stderr, flush=True)
+                if status_file:
+                    _write_status(status_file, h)
+                next_beat += heartbeat
+    finally:
+        for s, h in old.items():
+            signal.signal(s, h)
+
+    # graceful shutdown: stop admitting, answer everything queued, report
+    health = frontend.drain()
+    results = [frontend.result(t) for t in tickets]
+    lat = sorted(r.latency for r in results if r.ok and r.latency is not None)
+    pct = lambda p: (round(lat[min(len(lat) - 1,
+                                   int(p / 100 * len(lat)))], 4)
+                     if lat else None)
+    by_status: dict = {}
+    for r in results:
+        by_status[r.status] = by_status.get(r.status, 0) + 1
+    report = {
+        "requests": len(tickets),
+        "by_status": by_status,
+        "p50_s": pct(50), "p99_s": pct(99),
+        "goodput": (sum(1 for r in results if r.ok) / len(tickets)
+                    if tickets else 1.0),
+        "degraded_frac": (sum(1 for r in results if r.degraded) / len(tickets)
+                          if tickets else 0.0),
+        "drained": health,
+        "stats": {k: v for k, v in frontend.stats().items()
+                  if k != "frontend"},
+        "signal": stop["sig"],
+    }
+    if status_file:
+        _write_status(status_file, {**health, "final": True})
+    print(json.dumps(report, indent=1))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="serve a PINN field bundle with resilience "
+                    "(admission control, deadlines, degraded modes)")
+    ap.add_argument("--bundle", default=None,
+                    help="exported bundle dir (repro.serve.export); "
+                         "omit for --demo")
+    ap.add_argument("--demo", default="usmap", choices=("usmap", "cart"),
+                    help="built-in demo bundle when --bundle is omitted")
+    ap.add_argument("--rate", type=float, default=20.0, help="requests/s")
+    ap.add_argument("--duration", type=float, default=5.0, help="seconds")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline seconds")
+    ap.add_argument("--order", type=int, default=2, choices=(1, 2))
+    ap.add_argument("--max-requests", type=int, default=None)
+    ap.add_argument("--queue-requests", type=int, default=256)
+    ap.add_argument("--queue-points", type=int, default=1 << 20)
+    ap.add_argument("--queue-age", type=float, default=0.02,
+                    help="flush once the queue head is this old (s)")
+    ap.add_argument("--faults", default=None,
+                    help="serve fault matrix, e.g. "
+                         "'engine-raise@3,nan-output@5,slow-engine@7*0.2,"
+                         "compile-storm@9'")
+    ap.add_argument("--heartbeat", type=float, default=1.0)
+    ap.add_argument("--status-file", default=None,
+                    help="atomically published health JSON for probes")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.serve import FieldEngine, ResilienceConfig, ResilientFrontend
+    from repro.serve.export import load_bundle
+
+    bundle = (load_bundle(args.bundle) if args.bundle
+              else _demo_bundle(args.demo, args.seed))
+    engine = FieldEngine(bundle)
+    if args.faults:
+        from repro.runtime import FaultInjector, FaultyEngine, parse_faults
+        engine = FaultyEngine(engine, FaultInjector(parse_faults(args.faults)))
+    cfg = ResilienceConfig(order=args.order if bundle.pde is not None else 1,
+                           max_queue_requests=args.queue_requests,
+                           max_queue_points=args.queue_points,
+                           max_queue_age=args.queue_age,
+                           default_deadline=args.deadline)
+    fe = ResilientFrontend(engine, cfg, seed=args.seed)
+    sampler = _cloud_sampler(bundle.decomp, args.seed)
+    fe.query(sampler())   # compile warmup outside the measured traffic
+    report = run_server(fe, sampler, rate=args.rate, duration=args.duration,
+                        deadline=args.deadline, heartbeat=args.heartbeat,
+                        status_file=args.status_file, seed=args.seed,
+                        max_requests=args.max_requests)
+    return 0 if report["drained"]["unanswered"] == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,7 @@
 from repro.runtime.elastic import (CentroidSpec, balanced_counts, remap_params,
                                    throughput_weights)
-from repro.runtime.failures import (FAULT_KINDS, Fault, FaultInjector,
+from repro.runtime.failures import (FAULT_KINDS, SERVE_FAULT_KINDS, Fault,
+                                    FaultInjector, FaultyEngine,
                                     InjectedFailure, inject_nan, parse_faults,
                                     run_with_failures)
 from repro.runtime.supervisor import (Supervisor, SupervisorConfig,

@@ -93,22 +93,44 @@ def run_with_failures(
 
 FAULT_KINDS = ("crash", "nan_params", "nan_grads", "straggler")
 
+# serve-side matrix (consumed by FaultyEngine; ``chunk`` = engine dispatch
+# index — each evaluate ATTEMPT, so retries shift later indices, mirroring
+# the training-side launch-indexed semantics):
+#
+#   ============= =========================================================
+#   kind           effect at the scheduled dispatch
+#   ============= =========================================================
+#   engine_raise   InjectedFailure out of evaluate (poisoned query / OOM /
+#                  crashed backend) — frontend must bisect + quarantine
+#   nan_output     evaluation succeeds but one CLAIMED point comes back NaN
+#                  (weight corruption) — the serve output guard must trip
+#   slow_engine    ``delay`` seconds of injected latency before evaluating
+#                  (straggling device / noisy neighbor)
+#   compile_storm  the process-wide compiled-program cache is dropped: the
+#                  next dispatch pays full retrace+compile (new shape class,
+#                  restarted server) — a realistic tail-latency spike
+#   ============= =========================================================
+SERVE_FAULT_KINDS = ("engine_raise", "nan_output", "slow_engine",
+                     "compile_storm")
+
 
 @dataclass(frozen=True)
 class Fault:
     """One scheduled fault.  ``chunk`` indexes the supervisor's chunk LAUNCHES
     (attempts, so a retry consumed by an earlier fault shifts later indices by
-    design — schedules stay deterministic under recovery)."""
+    design — schedules stay deterministic under recovery).  Serve-side kinds
+    index engine dispatch attempts instead (see SERVE_FAULT_KINDS)."""
 
     chunk: int
-    kind: str                    # one of FAULT_KINDS
+    kind: str                    # one of FAULT_KINDS | SERVE_FAULT_KINDS
     subdomain: int | None = None  # nan_*: poison only this stacked slice
-    delay: float = 0.0            # straggler: seconds of injected sleep
+    delay: float = 0.0            # straggler/slow_engine: injected seconds
 
     def __post_init__(self):
-        if self.kind not in FAULT_KINDS:
-            raise ValueError(f"unknown fault kind {self.kind!r}; "
-                             f"expected one of {FAULT_KINDS}")
+        if self.kind not in FAULT_KINDS + SERVE_FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{FAULT_KINDS + SERVE_FAULT_KINDS}")
 
 
 class FaultInjector:
@@ -133,7 +155,9 @@ class FaultInjector:
 
 def parse_faults(spec: str) -> list[Fault]:
     """Parse a CLI fault schedule: ``kind@chunk[:subdomain][*delay]`` items,
-    comma-separated — e.g. ``crash@1,nan_params@2:0,straggler@3*0.2``."""
+    comma-separated — e.g. ``crash@1,nan_params@2:0,straggler@3*0.2`` or the
+    serve-side ``engine-raise@2,slow-engine@5*0.1`` (hyphens and underscores
+    in kind names are interchangeable)."""
     out = []
     for item in spec.split(","):
         item = item.strip()
@@ -142,10 +166,56 @@ def parse_faults(spec: str) -> list[Fault]:
         kind, _, rest = item.partition("@")
         rest, _, delay = rest.partition("*")
         rest, _, sub = rest.partition(":")
-        out.append(Fault(chunk=int(rest), kind=kind,
+        out.append(Fault(chunk=int(rest), kind=kind.replace("-", "_"),
                          subdomain=int(sub) if sub else None,
                          delay=float(delay) if delay else 0.25))
     return out
+
+
+# -------------------------------------------------------------- serve-side
+
+
+class FaultyEngine:
+    """Wrap a serving engine with a deterministic dispatch-indexed fault
+    schedule (the serve half of the fault matrix; kinds in
+    SERVE_FAULT_KINDS).  Transparent otherwise: attribute access delegates to
+    the wrapped engine, so frontends see bundle/counters as usual.
+
+    ``sleep`` is injectable so ``slow_engine`` can advance a virtual clock in
+    benchmarks instead of really sleeping."""
+
+    def __init__(self, engine, injector: FaultInjector, sleep=None):
+        import time
+        self.engine = engine
+        self.injector = injector
+        self._sleep = sleep if sleep is not None else time.sleep
+        self.calls = 0
+
+    def __getattr__(self, name):
+        return getattr(self.engine, name)
+
+    def evaluate(self, pts, order: int = 2) -> dict:
+        idx = self.calls
+        self.calls += 1
+        due = self.injector.take(idx)
+        for f in due:
+            if f.kind == "slow_engine":
+                self._sleep(f.delay)
+            elif f.kind == "compile_storm":
+                from repro.serve import engine as engine_mod
+                engine_mod._EVAL_CACHE.clear()
+            elif f.kind == "engine_raise":
+                raise InjectedFailure(
+                    f"injected engine_raise at dispatch {idx}")
+        out = self.engine.evaluate(pts, order=order)
+        for f in due:
+            if f.kind == "nan_output":
+                u = np.array(out["u"])  # stitched output: poison one CLAIMED
+                finite = np.isfinite(u.reshape(len(u), -1)).all(axis=1)
+                row = int(np.argmax(finite)) if finite.any() else 0
+                u[row] = np.nan
+                out = dict(out, u=u)
+        return out
 
 
 def inject_nan(tree: dict, kind: str, subdomain: int | None = None) -> dict:

@@ -6,10 +6,15 @@ This package freezes a trained cPINN/XPINN into a self-contained artifact
 (:mod:`repro.serve.export`), routes arbitrary query clouds to subdomains with
 vectorized geometry tests (:mod:`repro.serve.routing`), evaluates ALL
 subdomains in one fused network entry and stitches a single-valued field
-across interfaces (:mod:`repro.serve.engine`), and fronts the engine with
-microbatching + an LRU result cache (:mod:`repro.serve.frontend`).
+across interfaces (:mod:`repro.serve.engine`), fronts the engine with
+microbatching + an LRU result cache (:mod:`repro.serve.frontend`), and makes
+the whole stack survivable under production traffic — admission control,
+deadlines, degraded modes, circuit breaking (:mod:`repro.serve.resilience`).
 """
 from repro.serve.export import FieldBundle, export_bundle, load_bundle
 from repro.serve.engine import FieldEngine
-from repro.serve.frontend import ServeFrontend
+from repro.serve.frontend import ServeFrontend, UnknownTicketError
+from repro.serve.resilience import (CircuitBreaker, EngineOutputError,
+                                    GuardedEngine, ResilienceConfig,
+                                    ResilientFrontend, ServeResult)
 from repro.serve.routing import membership_matrix, route, RoutedQuery

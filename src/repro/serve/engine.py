@@ -73,6 +73,9 @@ class FieldEngine:
         # heterogeneous -> traced-code select path.  Both are ONE traced entry.
         self.uniform_act = fused.uniform_act_name(codes.tolist())
         self.n_dispatches = 0   # device dispatches issued (1 per evaluate)
+        self.last_claims = None  # (N,) claim counts of the latest evaluate —
+        # lets output guards distinguish legit outside-domain NaN from a
+        # poisoned claimed point without a second routing pass
 
     # ------------------------------------------------------------ internals
     def _route(self, pts) -> routing.RoutedQuery:
@@ -139,6 +142,6 @@ class FieldEngine:
         fn = self._get_fn(order)
         outs = fn(*self._device_args(routed))
         self.n_dispatches += 1
-        claims = routed.claims
+        claims = self.last_claims = routed.claims
         return {k: _stitch(routed, np.asarray(v), claims)
                 for k, v in outs.items()}

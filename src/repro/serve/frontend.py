@@ -16,8 +16,14 @@ frontend fixes both without threads or external deps:
   ``result`` flush the queue once its head ages out (clock injectable for
   tests), so a lone query is served within one deadline of any frontend
   activity;
+* **failure isolation** — a failing microbatch is bisected so one poisoned
+  cloud is quarantined (requeued at the tail) while its healthy batch-mates
+  are served from the same flush;
 * **counters** — requests / points / hit rate / dispatches / evaluation
   seconds, for the throughput benchmark and ops dashboards.
+
+Admission control, deadlines, degraded modes, and retry policy live one layer
+up in :mod:`repro.serve.resilience`.
 
 Usage: ``submit() ... flush() ... result()`` for explicit microbatching, or
 ``query()`` as the one-shot convenience (submit + flush + result).  Serving
@@ -34,6 +40,11 @@ import numpy as np
 from repro.serve.engine import FieldEngine
 
 
+class UnknownTicketError(KeyError):
+    """The ticket was never issued by this frontend, or its result was
+    already retrieved (``result`` hands each ticket's arrays out once)."""
+
+
 def _signature(pts: np.ndarray, order: int) -> tuple:
     return (pts.shape, order,
             hashlib.sha1(np.ascontiguousarray(pts).tobytes()).hexdigest())
@@ -42,22 +53,26 @@ def _signature(pts: np.ndarray, order: int) -> tuple:
 class ServeFrontend:
     def __init__(self, engine: FieldEngine, order: int = 2,
                  max_batch: int = 16384, cache_size: int = 64,
+                 cache_points: int | None = 1 << 22,
                  max_queue_age: float | None = None,
                  clock=time.monotonic):
         self.engine = engine
         self.order = order
         self.max_batch = max_batch
         self.cache_size = cache_size
+        self.cache_points = cache_points
         self.max_queue_age = max_queue_age
         self._clock = clock
         self._cache: OrderedDict[tuple, dict] = OrderedDict()
+        self._cache_pts = 0
+        # pending entry: (ticket, pts, key, enqueue_time)
         self._pending: list[tuple[int, np.ndarray, tuple, float]] = []
         self._results: dict[int, dict] = {}
         self._next_ticket = 0
         self.counters = {"requests": 0, "points": 0, "cache_hits": 0,
                          "cache_misses": 0, "dispatches": 0,
                          "dispatched_points": 0, "eval_seconds": 0.0,
-                         "deadline_flushes": 0}
+                         "deadline_flushes": 0, "quarantined": 0}
 
     # ------------------------------------------------------------- caching
     def _cache_get(self, key: tuple) -> dict | None:
@@ -67,10 +82,20 @@ class ServeFrontend:
         return out
 
     def _cache_put(self, key: tuple, result: dict) -> None:
+        n = key[0][0]  # points in the cloud (signature leads with pts.shape)
+        if self.cache_points is not None and n > self.cache_points:
+            return  # one giant grid must not monopolize (then thrash) the cache
+        if key not in self._cache:
+            self._cache_pts += n
         self._cache[key] = result
         self._cache.move_to_end(key)
-        while len(self._cache) > self.cache_size:
-            self._cache.popitem(last=False)
+        # evict by BOTH entry count and total cached points: the entry bound
+        # alone lets cache_size huge grids pin gigabytes of result arrays
+        while (len(self._cache) > self.cache_size
+               or (self.cache_points is not None
+                   and self._cache_pts > self.cache_points)):
+            old, _ = self._cache.popitem(last=False)
+            self._cache_pts -= old[0][0]
 
     # ------------------------------------------------------------- requests
     def submit(self, pts) -> int:
@@ -95,8 +120,11 @@ class ServeFrontend:
 
     # ------------------------------------------------------------- deadline
     def _deadline_due(self) -> bool:
+        # clock >= enqueue + age (NOT clock - enqueue >= age): keeps the fire
+        # condition bitwise-consistent with schedulers that precompute the due
+        # time as enqueue + age — the subtraction form can round one ulp short
         return (self.max_queue_age is not None and bool(self._pending)
-                and self._clock() - self._pending[0][3] >= self.max_queue_age)
+                and self._clock() >= self._pending[0][3] + self.max_queue_age)
 
     def poll(self) -> bool:
         """Flush iff the OLDEST queued request has waited ``max_queue_age`` —
@@ -114,16 +142,20 @@ class ServeFrontend:
 
         Duplicate clouds inside one flush are evaluated once and shared; each
         microbatch is ONE engine dispatch regardless of how many requests it
-        aggregates.  A failing evaluation re-queues every not-yet-served
-        request before re-raising, so tickets are never silently lost.
+        aggregates.  A failing microbatch is BISECTED: healthy batch-mates are
+        served, only the poisoned cloud(s) are quarantined — re-queued at the
+        queue TAIL (original arrival times kept) — and the first failure is
+        re-raised once everything servable has been served.  One poisoned
+        query therefore never wedges the queue: the old behavior (re-queue the
+        whole batch at the head) replayed the same failing microbatch forever.
         """
         pending, self._pending = self._pending, []
         by_key: OrderedDict[tuple, list] = OrderedDict()
-        for ticket, pts, key, _enq in pending:
-            by_key.setdefault(key, [ticket, pts])
-            if by_key[key][0] != ticket:
-                by_key[key].append(ticket)
-        unique = [(key, v[1], [v[0]] + v[2:]) for key, v in by_key.items()]
+        for ticket, pts, key, enq in pending:
+            ent = by_key.setdefault(key, [pts, []])
+            ent[1].append((ticket, enq))
+        unique = [(key, pts, toks) for key, (pts, toks) in by_key.items()]
+        failures: list = []
         i = 0
         while i < len(unique):
             # greedy microbatch: at least one request, then pack until full
@@ -134,37 +166,75 @@ class ServeFrontend:
                 batch.append(unique[i])
                 total += len(unique[i][1])
                 i += 1
-            cloud = np.concatenate([pts for _, pts, _ in batch], axis=0)
-            try:
-                t0 = time.perf_counter()
-                out = self.engine.evaluate(cloud, order=self.order)
-                self.counters["eval_seconds"] += time.perf_counter() - t0
-            except Exception:
-                now = self._clock()
-                for key, pts, tickets in batch + unique[i:]:
-                    self._pending.extend((t, pts, key, now) for t in tickets)
-                raise
-            self.counters["dispatches"] += 1
-            self.counters["dispatched_points"] += len(cloud)
-            ofs = 0
-            for key, pts, tickets in batch:
-                n = len(pts)
-                # detach from the full-microbatch arrays (a view would pin the
-                # whole batch in memory for the cache's lifetime) and freeze:
-                # cache hits hand out the SAME arrays, so caller mutation
-                # would otherwise silently poison later hits
-                res = {}
-                for k, v in out.items():
-                    arr = v[ofs:ofs + n].copy()
-                    arr.flags.writeable = False
-                    res[k] = arr
-                ofs += n
-                self._cache_put(key, res)
-                for t in tickets:
-                    self._results[t] = res
+            self._eval_batch(batch, failures)
+        if failures:
+            for key, pts, toks, _exc in failures:
+                self._pending.extend((t, pts, key, enq) for t, enq in toks)
+            raise failures[0][3]
+
+    def _eval_batch(self, batch: list, failures: list) -> None:
+        """One microbatch dispatch; on failure, bisect to isolate the poison."""
+        cloud = np.concatenate([pts for _, pts, _ in batch], axis=0)
+        try:
+            t0 = time.perf_counter()
+            out = self.engine.evaluate(cloud, order=self.order)
+            self.counters["eval_seconds"] += time.perf_counter() - t0
+        except Exception as exc:
+            if len(batch) == 1:   # isolated: this cloud is the poison
+                self.counters["quarantined"] += 1
+                failures.append(batch[0] + (exc,))
+                return
+            mid = len(batch) // 2
+            self._eval_batch(batch[:mid], failures)
+            self._eval_batch(batch[mid:], failures)
+            return
+        self.counters["dispatches"] += 1
+        self.counters["dispatched_points"] += len(cloud)
+        ofs = 0
+        for key, pts, toks in batch:
+            n = len(pts)
+            # detach from the full-microbatch arrays (a view would pin the
+            # whole batch in memory for the cache's lifetime) and freeze:
+            # cache hits hand out the SAME arrays, so caller mutation
+            # would otherwise silently poison later hits
+            res = {}
+            for k, v in out.items():
+                arr = v[ofs:ofs + n].copy()
+                arr.flags.writeable = False
+                res[k] = arr
+            ofs += n
+            self._cache_put(key, res)
+            for t, _enq in toks:
+                self._results[t] = res
+
+    # ------------------------------------------------------------- results
+    def ready(self, ticket: int) -> bool:
+        return ticket in self._results
+
+    def pending_tickets(self) -> list[int]:
+        return [t for t, _pts, _key, _enq in self._pending]
+
+    def withdraw(self, ticket: int):
+        """Remove a still-pending request (policy layers: deadlines, retry
+        caps).  Returns the withdrawn ``(pts, key)`` or None if not pending."""
+        for i, (t, pts, key, _enq) in enumerate(self._pending):
+            if t == ticket:
+                del self._pending[i]
+                return pts, key
+        return None
 
     def result(self, ticket: int) -> dict:
+        """Pop a ticket's result.  A still-pending ticket auto-flushes the
+        queue (it used to ``KeyError`` opaquely); an unknown or already-popped
+        ticket raises :class:`UnknownTicketError`."""
         self.poll()
+        if ticket not in self._results:
+            if any(t == ticket for t, _p, _k, _e in self._pending):
+                self.flush()
+            else:
+                raise UnknownTicketError(
+                    f"ticket {ticket}: never issued or already retrieved "
+                    f"(results are handed out once)")
         return self._results.pop(ticket)
 
     def query(self, pts) -> dict:
@@ -176,6 +246,8 @@ class ServeFrontend:
     # ------------------------------------------------------------- metrics
     def stats(self) -> dict:
         c = dict(self.counters)
+        c["cache_entries"] = len(self._cache)
+        c["cache_points"] = self._cache_pts
         lookups = c["cache_hits"] + c["cache_misses"]
         c["hit_rate"] = c["cache_hits"] / lookups if lookups else 0.0
         # engine throughput counts only points that actually dispatched —

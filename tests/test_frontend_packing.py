@@ -1,0 +1,134 @@
+"""Property tests for the frontend's greedy microbatch packer (hypothesis).
+
+The packer invariants, under arbitrary submit sequences:
+
+* no dispatched microbatch exceeds ``max_batch`` points UNLESS it is a single
+  cloud that is itself larger (a lone oversized request still gets served);
+* every ticket's result equals its standalone evaluation (ticket -> slice
+  correspondence survives packing, dedup, and batch boundaries);
+* identical clouds inside one flush are evaluated once (dedup) and every
+  duplicate ticket receives the shared result;
+* dispatched points account exactly for the unique queued points — nothing
+  evaluated twice, nothing dropped.
+
+Plus the deadline-flush path under injected clock skew: a clock that jumps
+backwards must neither crash ``poll`` nor trigger a spurious flush.
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+try:   # property tests need hypothesis; the clock-skew test runs regardless
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+    def given(**kw):   # decorators become skip markers
+        return pytest.mark.skip(reason="hypothesis not installed")
+    settings = given
+
+    class _NullStrategies:    # st.* evaluates at decoration time: no-op it
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _NullStrategies()
+
+from repro.serve import ServeFrontend
+
+W = np.array([[1.0], [2.0]])   # the stub's exact linear field
+
+
+class RecordingEngine:
+    """Pure-numpy engine double: u = pts @ W, records every dispatch size."""
+
+    def __init__(self):
+        self.bundle = SimpleNamespace(decomp=SimpleNamespace(dim=2))
+        self.batch_sizes: list[int] = []
+
+    def evaluate(self, pts, order=2):
+        pts = np.asarray(pts, float)
+        self.batch_sizes.append(len(pts))
+        return {"u": pts @ W}
+
+
+def _clouds_from(sizes, dups, seed=0):
+    """Deterministic clouds; ``dups[i]`` aliases cloud i to cloud i-1."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, n in enumerate(sizes):
+        if i > 0 and dups[i]:
+            out.append(out[i - 1])
+        else:
+            out.append(rng.uniform(-1.0, 1.0, size=(n, 2)))
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(sizes=st.lists(st.integers(1, 40), min_size=1, max_size=12),
+       dups=st.lists(st.booleans(), min_size=12, max_size=12),
+       max_batch=st.integers(4, 120))
+def test_packer_invariants(sizes, dups, max_batch):
+    eng = RecordingEngine()
+    fe = ServeFrontend(eng, order=1, max_batch=max_batch)
+    clouds = _clouds_from(sizes, dups)
+    tickets = [fe.submit(c) for c in clouds]
+    fe.flush()
+
+    # (1) batch bound: only a lone oversized cloud may exceed max_batch
+    biggest = max(len(c) for c in clouds)
+    for b in eng.batch_sizes:
+        assert b <= max(max_batch, biggest)
+        if b > max_batch:
+            assert b == biggest  # an unsplittable single cloud, not a pack
+
+    # (2+3) ticket -> slice correspondence, dedup shares bitwise results
+    seen: dict[bytes, np.ndarray] = {}
+    for t, c in zip(tickets, clouds):
+        got = fe.result(t)["u"]
+        np.testing.assert_allclose(got, c @ W, atol=1e-12)
+        key = c.tobytes()
+        if key in seen:
+            assert got.tobytes() == seen[key].tobytes()
+        seen[key] = got
+
+    # (4) exact point accounting: unique queued points, each evaluated once
+    unique_pts = sum(len(np.frombuffer(k, float)) // 2 for k in seen)
+    assert sum(eng.batch_sizes) == unique_pts
+    assert fe.counters["dispatched_points"] == unique_pts
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_pre=st.integers(0, 5))
+def test_dedup_single_dispatch_within_flush(n_pre):
+    """N identical clouds in one flush = ONE evaluation of that cloud."""
+    eng = RecordingEngine()
+    fe = ServeFrontend(eng, order=1, max_batch=1000)
+    rng = np.random.default_rng(3)
+    pre = [rng.uniform(-1, 1, size=(5, 2)) for _ in range(n_pre)]
+    dup = rng.uniform(-1, 1, size=(7, 2))
+    tickets = [fe.submit(c) for c in pre] + [fe.submit(dup) for _ in range(4)]
+    fe.flush()
+    assert len(eng.batch_sizes) == 1           # everything packs + dedups
+    assert eng.batch_sizes[0] == 5 * n_pre + 7
+    for t in tickets:
+        fe.result(t)
+    assert fe.counters["requests"] == n_pre + 4
+
+
+def test_deadline_flush_under_clock_skew():
+    """A backwards clock jump (NTP step, VM migration) must not crash poll
+    or flush early; once the clock moves past the head's age, it flushes."""
+    eng = RecordingEngine()
+    now = [100.0]
+    fe = ServeFrontend(eng, order=1, max_queue_age=1.0, clock=lambda: now[0])
+    t = fe.submit(np.zeros((3, 2)))
+    now[0] = 50.0                              # clock jumps BACKWARDS
+    assert not fe.poll() and not eng.batch_sizes
+    tb = fe.submit(np.ones((2, 2)))            # head enqueue time stays 100.0
+    assert not eng.batch_sizes                 # no spurious age-out flush
+    now[0] = 100.5
+    assert not fe.poll()                       # 0.5s old: under the deadline
+    now[0] = 101.0
+    assert fe.poll() and len(eng.batch_sizes) == 1
+    fe.result(t), fe.result(tb)
+    assert fe.stats()["deadline_flushes"] == 1

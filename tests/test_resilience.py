@@ -1,0 +1,518 @@
+"""Resilient serving: admission, deadlines, the degraded ladder, isolation.
+
+Covers the resilience contract (EXPERIMENTS.md §Serving-SLO):
+
+* admission control sheds typed-and-fast on BOTH queue bounds, without ever
+  dispatching the shed request;
+* an expired deadline is answered ``deadline_exceeded`` and never dispatched;
+* the degraded ladder steps order=2 -> order=1 -> cache-only under queue
+  pressure, repeated failure, and an open breaker, with ``degraded=True`` in
+  the envelope;
+* the frontend's bisection quarantines a poisoned cloud while serving its
+  healthy batch-mates, the resilience layer retries it (capped) and then
+  answers ``failed``;
+* the NaN/Inf output guard trips on corrupted CLAIMED points only —
+  outside-domain NaN stays legal;
+* the circuit breaker cycles closed -> open -> half_open -> closed on an
+  injected clock;
+* the invariant under the injected serve fault matrix: EVERY admitted ticket
+  is answered exactly once and the queue drains.
+
+Most tests drive a dependency-free stub engine (deterministic linear field)
+on injected clocks, so they are milliseconds; two end-to-end fault-matrix
+tests use the real FieldEngine (small one in tier-1, the sweep behind
+``-m slo``).
+"""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import CartesianDecomposition
+from repro.core.nets import MLPConfig, SubdomainModelConfig, stacked_init
+from repro.core.pdes import Burgers1D
+from repro.runtime import (
+    Fault, FaultInjector, FaultyEngine, InjectedFailure, SERVE_FAULT_KINDS,
+    parse_faults,
+)
+from repro.serve import (
+    CircuitBreaker, EngineOutputError, FieldBundle, FieldEngine,
+    ResilienceConfig, ResilientFrontend, ServeFrontend, UnknownTicketError,
+)
+from repro.serve import engine as engine_mod
+
+POISON_X = 777.0   # stub engines treat clouds containing this x as poisoned
+
+
+class StubEngine:
+    """Deterministic engine double: u = pts @ [1, 2] (order-independent), all
+    points claimed.  ``fail`` raises / ``nan`` corrupts row 0 whenever the
+    dispatched cloud contains POISON_X — optionally only for the first
+    ``fail_times`` such dispatches (transient vs persistent faults)."""
+
+    def __init__(self, dim=2, fail=False, nan=False, fail_times=None,
+                 fail_all=False):
+        self.bundle = SimpleNamespace(
+            decomp=SimpleNamespace(dim=dim))
+        self.n_dispatches = 0
+        self.poison_evals = 0
+        self.last_claims = None
+        self.fail, self.nan = fail, nan
+        self.fail_times, self.fail_all = fail_times, fail_all
+
+    def _faulting(self, pts) -> bool:
+        if self.fail_all:
+            return True
+        if not (self.fail or self.nan) or POISON_X not in pts[:, 0]:
+            return False
+        self.poison_evals += 1
+        return (self.fail_times is None
+                or self.poison_evals <= self.fail_times)
+
+    def evaluate(self, pts, order=2):
+        pts = np.asarray(pts, float)
+        faulting = self._faulting(pts)
+        if faulting and (self.fail or self.fail_all):
+            raise InjectedFailure("stub engine failure")
+        self.n_dispatches += 1
+        self.last_claims = np.ones(len(pts), np.int64)
+        u = pts @ np.array([[1.0], [2.0]])
+        if faulting and self.nan:
+            u = u.copy()
+            u[0] = np.nan
+        return {"u": u}
+
+
+def _cloud(n, seed=0):
+    return np.random.default_rng(seed).uniform(-1.0, 1.0, size=(n, 2))
+
+
+def _poison(n=3):
+    c = _cloud(n, seed=99)
+    c[0, 0] = POISON_X
+    return c
+
+
+def _rf(engine, clock=None, **cfg_kw):
+    now = [0.0] if clock is None else clock
+    fe = ResilientFrontend(engine, ResilienceConfig(**cfg_kw),
+                           clock=lambda: now[0],
+                           sleep=lambda s: now.__setitem__(0, now[0] + s))
+    return fe, now
+
+
+# ---------------------------------------------------------------- admission
+
+def test_admission_sheds_on_queue_depth_without_dispatch():
+    eng = StubEngine()
+    # ladder thresholds > 1: this test isolates the admission bound
+    fe, _ = _rf(eng, max_queue_requests=2, degrade_at=2.0, cache_only_at=3.0)
+    t1, t2 = fe.submit(_cloud(4)), fe.submit(_cloud(5, seed=1))
+    t3 = fe.submit(_cloud(6, seed=2))          # third would exceed the bound
+    r3 = fe.result(t3)
+    assert r3.status == "shed" and r3.reason == "overload" and not r3.ok
+    assert eng.n_dispatches == 0               # shed BEFORE any dispatch
+    fe.flush()
+    assert fe.result(t1).status == "served"
+    assert fe.result(t2).status == "served"
+    assert fe.counters["shed_overload"] == 1
+
+
+def test_admission_sheds_on_point_budget():
+    eng = StubEngine()
+    fe, _ = _rf(eng, max_queue_points=100)
+    fe.submit(_cloud(90))
+    t = fe.submit(_cloud(20, seed=1))          # 110 > 100 queued points
+    assert fe.result(t).reason == "overload"
+    assert eng.n_dispatches == 0
+
+
+def test_admission_cache_hit_skips_the_queue():
+    eng = StubEngine()
+    fe, _ = _rf(eng)
+    pts = _cloud(8)
+    t = fe.submit(pts)
+    fe.flush()
+    assert fe.result(t).status == "served"
+    d0 = eng.n_dispatches
+    r = fe.result(fe.submit(pts))              # identical cloud: cache probe
+    assert r.status == "served" and r.reason == "cache" and r.ok
+    assert eng.n_dispatches == d0
+    assert fe.counters["served_cache"] == 1
+
+
+# ---------------------------------------------------------------- deadlines
+
+def test_expired_deadline_answered_never_dispatched():
+    eng = StubEngine()
+    fe, now = _rf(eng, default_deadline=1.0)
+    t = fe.submit(_cloud(4))
+    now[0] = 2.0                               # past the deadline
+    fe.flush()
+    r = fe.result(t)
+    assert r.status == "deadline_exceeded" and not r.ok
+    assert eng.n_dispatches == 0
+    assert fe.counters["deadline_exceeded"] == 1
+    # per-request deadline overrides the default
+    t2 = fe.submit(_cloud(4, seed=1), deadline=10.0)
+    now[0] = 4.0
+    fe.flush()
+    assert fe.result(t2).status == "served"
+
+
+def test_poll_flushes_on_queue_age():
+    eng = StubEngine()
+    fe, now = _rf(eng, max_queue_age=1.0)
+    t = fe.submit(_cloud(4))
+    assert not fe.poll() and eng.n_dispatches == 0
+    assert fe.next_flush_due() == 1.0
+    now[0] = 1.0
+    assert fe.poll() and eng.n_dispatches == 1
+    assert fe.result(t).status == "served"
+    assert fe.next_flush_due() is None         # nothing pending
+
+
+def test_poll_fires_exactly_at_next_flush_due():
+    # Contract: a driver that advances its clock EXACTLY to next_flush_due()
+    # must see poll() fire.  The old `clock - admitted >= age` comparison
+    # could round one ulp below age when the due time was computed as
+    # `admitted + age`, livelocking discrete-event drivers (the SLO
+    # benchmark's virtual-time loop spun forever on exactly this).
+    eng = StubEngine()
+    fe, now = _rf(eng, max_queue_age=0.02)
+    rng = np.random.default_rng(3)
+    t = 0.0
+    for i in range(200):
+        t += float(rng.exponential(0.0137))
+        now[0] = t
+        ticket = fe.submit(_cloud(4, seed=i))  # unique → no admission cache hit
+        due = fe.next_flush_due()
+        if due is None:            # answered at admission (cache hit)
+            continue
+        now[0] = due
+        assert fe.poll(), f"poll refused to fire at its own due time {due!r}"
+        assert fe.result(ticket).status == "served"
+
+
+# ------------------------------------------------------------------- ladder
+
+def test_pressure_degrades_to_first_order():
+    eng = StubEngine()
+    fe, _ = _rf(eng, max_queue_requests=4, degrade_at=0.5, cache_only_at=0.9)
+    ts = [fe.submit(_cloud(4, seed=s)) for s in range(2)]  # pressure 0.5
+    fe.flush()
+    for t in ts:
+        r = fe.result(t)
+        assert r.status == "degraded" and r.degraded and r.ok
+        assert r.order == 1 and r.reason == "pressure"
+    assert fe.counters["degraded"] == 2 and fe.level == 1
+
+
+def test_cache_only_rung_serves_hits_sheds_misses():
+    eng = StubEngine()
+    fe, _ = _rf(eng, max_queue_requests=4, degrade_at=0.5, cache_only_at=0.9)
+    warm = _cloud(4)
+    # warm the cache at the DEGRADED tier (pressure 0.5 -> order=1), so the
+    # admission-time full-order probe misses but the cache-only rung hits
+    w0, w1 = fe.submit(warm), fe.submit(_cloud(4, seed=8))
+    fe.flush()
+    assert fe.result(w0).order == 1 and fe.result(w1).order == 1
+    ts = [fe.submit(c) for c in
+          (warm, _cloud(4, 1), _cloud(4, 2), _cloud(4, 3))]  # pressure 1.0
+    d0 = eng.n_dispatches
+    fe.flush()                                 # cache-only: NO dispatch
+    assert eng.n_dispatches == d0 and fe.level == 2
+    rs = [fe.result(t) for t in ts]
+    assert rs[0].status == "degraded" and rs[0].reason == "cache_only"
+    assert rs[0].ok and rs[0].degraded and rs[0].order == 1
+    for r in rs[1:]:
+        assert r.status == "shed" and r.reason == "cache_only"
+    assert fe.counters["shed_cache_only"] == 3
+
+
+def test_repeated_failure_degrades_the_retry():
+    """A single transient failure still earns a full-order answer; from the
+    second failed round on, the retry steps down to order=1."""
+    eng = StubEngine(fail=True, fail_times=1)
+    fe, _ = _rf(eng, retry_limit=4, breaker_threshold=10)
+    t = fe.submit(_poison())
+    fe.flush()
+    r = fe.result(t)
+    assert r.status == "served" and r.order == 2 and not r.degraded
+
+    eng2 = StubEngine(fail=True, fail_times=3)
+    fe2, _ = _rf(eng2, retry_limit=4, breaker_threshold=10)
+    t = fe2.submit(_poison())
+    fe2.flush()
+    r = fe2.result(t)
+    assert r.status == "degraded" and r.order == 1 and r.degraded and r.ok
+    assert fe2.counters["retries"] >= 2
+
+
+# ---------------------------------------------------------- circuit breaker
+
+def test_circuit_breaker_cycle():
+    now = [0.0]
+    br = CircuitBreaker(threshold=2, cooldown=5.0, clock=lambda: now[0])
+    assert br.allow() and br.state == "closed"
+    br.record_failure()
+    assert br.allow()                          # under threshold
+    br.record_failure()
+    assert br.state == "open" and not br.allow() and br.opens == 1
+    now[0] = 5.0
+    assert br.allow() and br.state == "half_open"   # cooldown elapsed: probe
+    br.record_failure()                        # probe failed: re-open
+    assert br.state == "open" and br.opens == 2
+    now[0] = 10.0
+    assert br.allow() and br.state == "half_open"
+    br.record_success()
+    assert br.state == "closed" and br.failures == 0
+
+
+def test_breaker_opens_fast_fails_then_recovers():
+    eng = StubEngine(fail_all=True)
+    fe, now = _rf(eng, retry_limit=1, breaker_threshold=1,
+                  breaker_cooldown=5.0)
+    t = fe.submit(_cloud(4))
+    fe.flush()
+    assert fe.result(t).status == "failed"
+    assert fe.breaker.state == "open" and fe.counters["failed"] == 1
+    assert not fe.health()["ready"]
+
+    t2 = fe.submit(_cloud(4, seed=1))          # breaker open: no dispatch
+    fe.flush()
+    r2 = fe.result(t2)
+    assert r2.status == "shed" and r2.reason == "breaker_open"
+    assert eng.poison_evals == 0 and fe.counters["shed_breaker_open"] == 1
+
+    eng.fail_all = False                       # engine healed
+    now[0] = 100.0                             # past the cooldown: half-open
+    t3 = fe.submit(_cloud(4, seed=2))
+    fe.flush()
+    r3 = fe.result(t3)                         # probe at the cheap tier
+    assert r3.status == "degraded" and r3.order == 1 and r3.ok
+    assert fe.breaker.state == "closed"        # probe success closed it
+    assert fe.health()["ready"] and fe.health()["status"] == "ok"
+
+
+# ------------------------------------------------------- bisect quarantine
+
+def test_flush_bisects_and_serves_healthy_batchmates():
+    """One poisoned cloud in a microbatch: healthy batch-mates are served,
+    the poison is quarantined at the queue TAIL, and the failure re-raises —
+    the old behavior requeued the whole batch at the head forever."""
+    eng = StubEngine(fail=True)
+    fe = ServeFrontend(eng, order=1)
+    c1, c2 = _cloud(5), _cloud(7, seed=1)
+    t1 = fe.submit(c1)
+    tp = fe.submit(_poison())
+    t2 = fe.submit(c2)
+    with pytest.raises(InjectedFailure):
+        fe.flush()
+    assert fe.ready(t1) and fe.ready(t2) and not fe.ready(tp)
+    assert fe.pending_tickets() == [tp]        # requeued, still answerable
+    assert fe.counters["quarantined"] == 1
+    np.testing.assert_allclose(fe.result(t1)["u"],
+                               c1 @ np.array([[1.0], [2.0]]))
+    np.testing.assert_allclose(fe.result(t2)["u"],
+                               c2 @ np.array([[1.0], [2.0]]))
+    eng.fail = False                           # heal: the quarantined cloud
+    fe.flush()                                 # is served on the next flush
+    assert np.isnan(fe.result(tp)["u"][0]).sum() == 0
+
+
+def test_resilient_poison_failed_after_retry_cap():
+    eng = StubEngine(fail=True)
+    fe, _ = _rf(eng, retry_limit=2, breaker_threshold=100)
+    th = fe.submit(_cloud(6))
+    tp = fe.submit(_poison())
+    fe.flush()
+    assert fe.result(th).status == "served"    # healthy batch-mate unharmed
+    rp = fe.result(tp)
+    assert rp.status == "failed" and "InjectedFailure" in rp.reason
+    assert fe.counters["retries"] >= 1
+    assert fe.health()["unanswered"] == 0
+
+
+# ------------------------------------------------------------- output guard
+
+def test_nan_guard_trips_on_claimed_point():
+    eng = StubEngine(nan=True)
+    fe, _ = _rf(eng, retry_limit=2, breaker_threshold=100)
+    th = fe.submit(_cloud(6))
+    tp = fe.submit(_poison())
+    fe.flush()
+    assert fe.result(th).status == "served"
+    rp = fe.result(tp)
+    assert rp.status == "failed" and "EngineOutputError" in rp.reason
+    assert fe.guard.trips >= 1
+    # the poisoned result was never cached: a healthy re-ask dispatches anew
+    assert fe.stats()["frontend"]["cache_entries"] == 1
+
+
+def test_nan_at_unclaimed_point_is_legal():
+    """Outside-domain NaN is the stitching contract, not corruption."""
+    class OutsideNaN(StubEngine):
+        def evaluate(self, pts, order=2):
+            out = super().evaluate(pts, order)
+            out["u"] = out["u"].copy()
+            out["u"][0] = np.nan
+            self.last_claims = np.ones(len(pts), np.int64)
+            self.last_claims[0] = 0            # row 0: outside every region
+            return out
+
+    fe, _ = _rf(OutsideNaN())
+    r = fe.query(_cloud(5))
+    assert r.status == "served" and np.isnan(r.data["u"][0]).all()
+    assert fe.guard.trips == 0
+
+
+# ---------------------------------------------------------------- lifecycle
+
+def test_drain_stops_admission_and_answers_everything():
+    eng = StubEngine()
+    fe, _ = _rf(eng)
+    ts = [fe.submit(_cloud(4, seed=s)) for s in range(3)]
+    health = fe.drain()
+    assert health["status"] == "draining" and not health["ready"]
+    assert health["unanswered"] == 0           # answered even if uncollected
+    late = fe.submit(_cloud(4, seed=9))
+    assert fe.result(late).reason == "draining"
+    for t in ts:
+        assert fe.result(t).status == "served"
+    assert fe.stats()["answered"] == 4
+
+
+def test_health_snapshot_fields():
+    fe, _ = _rf(StubEngine(), max_queue_requests=4, degrade_at=0.5)
+    h = fe.health()
+    assert h["status"] == "ok" and h["ready"]
+    assert h["breaker"]["state"] == "closed"
+    assert h["queue"] == {"requests": 0, "points": 0, "pressure": 0.0}
+    fe.submit(_cloud(4)), fe.submit(_cloud(4, 1))
+    assert fe.health()["status"] == "degraded"  # pressure >= degrade_at
+    assert fe.health()["queue"]["requests"] == 2
+
+
+def test_resilient_result_pending_autoflush_and_double_pop():
+    fe, _ = _rf(StubEngine())
+    t = fe.submit(_cloud(4))
+    assert fe.result(t).status == "served"     # pending ticket: auto-flush
+    with pytest.raises(UnknownTicketError):
+        fe.result(t)                           # results hand out once
+    with pytest.raises(UnknownTicketError):
+        fe.result(12345)
+
+
+# -------------------------------------------------- fault-matrix end to end
+
+def _tiny_bundle(seed=0):
+    dec = CartesianDecomposition(((-1, 1), (0, 1)), 2, 2)
+    cfg = SubdomainModelConfig(nets={"u": MLPConfig(2, 1, 16, 3)})
+    params, codes = stacked_init(cfg, dec.n_sub, jax.random.PRNGKey(seed))
+    return FieldBundle(model_cfg=cfg, params=params, decomp=dec,
+                       act_codes=np.asarray(codes), pde=Burgers1D())
+
+
+def _run_matrix(n_req: int, faults: list, seed=0) -> ResilientFrontend:
+    now = [0.0]
+    vsleep = lambda s: now.__setitem__(0, now[0] + s)
+    engine = FaultyEngine(FieldEngine(_tiny_bundle()),
+                          FaultInjector(faults), sleep=vsleep)
+    fe = ResilientFrontend(
+        engine, ResilienceConfig(order=2, default_deadline=5.0,
+                                 max_queue_age=0.2, retry_backoff=0.01),
+        clock=lambda: now[0], sleep=vsleep, seed=seed)
+    rng = np.random.default_rng(seed)
+    tickets = []
+    for i in range(n_req):
+        tickets.append(fe.submit(
+            rng.uniform([-1, 0], [1, 1], size=(int(rng.choice((8, 24))), 2))))
+        now[0] += 0.05
+        fe.poll()
+        if i % 3 == 2:
+            fe.flush()
+    fe.drain()
+    results = [fe.result(t) for t in tickets]
+    assert len(results) == n_req
+    assert fe.stats()["answered"] == n_req     # every ticket answered once
+    assert fe.health()["unanswered"] == 0      # ... and none left behind
+    ok = [r for r in results if r.ok]
+    assert ok, "fault matrix starved every request"
+    for r in ok:   # data-bearing answers are finite at claimed points
+        assert np.isfinite(r.data["u"]).any()
+    return fe
+
+
+def test_every_ticket_answered_under_fault_matrix():
+    """Tier-1 subset: one of each serve fault kind against the real engine."""
+    fe = _run_matrix(9, [Fault(chunk=1, kind="engine_raise"),
+                         Fault(chunk=3, kind="nan_output"),
+                         Fault(chunk=5, kind="slow_engine", delay=0.01)])
+    # dispatch-indexed faults are transient: bisection's re-evaluation can
+    # absorb them without a quarantine, but SOME layer must have seen them
+    s = fe.stats()
+    assert (s["guard_trips"] + s["flush_failures"]
+            + s["frontend"]["quarantined"]) >= 1
+
+
+@pytest.mark.slo
+def test_fault_matrix_sweep():
+    """The full sweep (``pytest -m slo``): dense cycling matrix including a
+    compile storm, many microbatch shapes, breaker given a real workout."""
+    from benchmarks.serve_slo import fault_matrix
+    fe = _run_matrix(48, fault_matrix(96, period=3))
+    s = fe.stats()
+    assert s["guard_trips"] >= 1 or s["frontend"]["quarantined"] >= 1
+
+
+# ------------------------------------------------------------ launch entry
+
+def test_serve_field_demo_server(tmp_path, capsys):
+    """launch/serve_field: demo bundle, Poisson traffic, faults, drain —
+    exits 0 (every admitted ticket answered) and publishes a status file."""
+    import json
+
+    from repro.launch.serve_field import main
+
+    status = str(tmp_path / "status.json")
+    rc = main(["--demo", "cart", "--order", "1", "--rate", "50",
+               "--duration", "0.8", "--max-requests", "6",
+               "--queue-age", "0.01", "--heartbeat", "0.2",
+               "--deadline", "2.0", "--status-file", status,
+               "--faults", "engine-raise@2"])
+    assert rc == 0
+    report = json.loads(capsys.readouterr().out)
+    assert report["requests"] >= 1
+    assert sum(report["by_status"].values()) == report["requests"]
+    assert report["drained"]["unanswered"] == 0
+    final = json.loads(open(status).read())
+    assert final["final"] and final["status"] == "draining"
+
+
+# ------------------------------------------------------------ fault parsing
+
+def test_parse_faults_serve_kinds_and_hyphens():
+    fs = parse_faults("engine-raise@3,nan-output@5,slow-engine@7*0.2,"
+                      "compile-storm@9")
+    assert [f.kind for f in fs] == list(SERVE_FAULT_KINDS)
+    assert fs[2].delay == 0.2
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        parse_faults("engine-explode@1")
+
+
+def test_faulty_engine_slow_and_storm():
+    slept = []
+    eng = FaultyEngine(StubEngine(),
+                       FaultInjector([Fault(chunk=0, kind="slow_engine",
+                                            delay=0.25),
+                                      Fault(chunk=1, kind="compile_storm")]),
+                       sleep=slept.append)
+    eng.evaluate(_cloud(3))
+    assert slept == [0.25]
+    engine_mod._EVAL_CACHE["sentinel"] = object()
+    eng.evaluate(_cloud(3))                    # storm drops the compiled cache
+    assert "sentinel" not in engine_mod._EVAL_CACHE
+    assert eng.injector.exhausted and eng.calls == 2

@@ -329,6 +329,52 @@ def test_frontend_deadline_flush_stubbed_clock():
     assert not fe2.poll() and len(fe2._pending) == 1
 
 
+def test_frontend_result_pending_autoflush_and_double_pop():
+    """result() on a still-pending ticket used to KeyError opaquely: now it
+    auto-flushes; an unknown/already-popped ticket raises a typed error."""
+    from repro.serve import UnknownTicketError
+
+    bundle = _cart_bundle()
+    eng = FieldEngine(bundle)
+    fe = ServeFrontend(eng, order=1)
+    pts = np.random.default_rng(11).uniform([-1, 0], [1, 1], size=(6, 2))
+    t = fe.submit(pts)
+    d0 = eng.n_dispatches
+    out = fe.result(t)                 # no explicit flush: auto-flushes
+    assert eng.n_dispatches == d0 + 1 and sorted(out) == ["flux", "grad_u", "u"]
+    with pytest.raises(UnknownTicketError, match=f"ticket {t}"):
+        fe.result(t)                   # results are handed out exactly once
+    with pytest.raises(UnknownTicketError, match="ticket 999"):
+        fe.result(999)
+
+
+def test_frontend_cache_point_budget():
+    """The cache is bounded by total cached POINTS, not just entry count —
+    cache_size huge grids must not pin unbounded result arrays."""
+    bundle = _cart_bundle()
+    eng = FieldEngine(bundle)
+    fe = ServeFrontend(eng, order=1, cache_size=64, cache_points=20)
+    rng = np.random.default_rng(12)
+    clouds = [rng.uniform([-1, 0], [1, 1], size=(8, 2)) for _ in range(3)]
+    for c in clouds:
+        fe.query(c)
+    s = fe.stats()
+    assert s["cache_points"] <= 20 and s["cache_entries"] == 2
+    fe.query(clouds[0])                # evicted by the point budget: miss
+    assert fe.stats()["cache_misses"] == 4
+    fe.query(clouds[2])                # most-recent entries survived: hit
+    assert fe.stats()["cache_hits"] == 1
+
+    # an entry larger than the whole budget bypasses the cache instead of
+    # evicting everything else and then missing anyway
+    giant = rng.uniform([-1, 0], [1, 1], size=(30, 2))
+    fe.query(giant)
+    s = fe.stats()
+    assert s["cache_points"] <= 20
+    fe.query(giant)
+    assert fe.stats()["cache_misses"] == 6     # giant is never cached
+
+
 def test_frontend_lru_eviction():
     bundle = _cart_bundle()
     fe = ServeFrontend(FieldEngine(bundle), order=1, cache_size=2)
