@@ -1,26 +1,85 @@
 """Paper Figs 6/7: computation vs communication time, cPINN vs XPINN, growing
 subdomain counts, communication-dominated regime (small nets, few points).
 
-Comm time = (full step) - (exchange-disabled step): the ablation replaces the
-ppermute halo with the local payload, keeping compute identical.
+Each configuration runs the FUSED single-dispatch chunk driver
+(``run_chunk``: lax.scan, ppermute halo inside the body) on a many-subdomain
+host mesh; the split comes from :func:`repro.obs.comp_comm_split` — the full
+chunk vs the exchange-ablated chunk (``disable_exchange=True`` keeps compute
+identical) timed in interleaved paired rounds — plus the analytic per-device
+collective-permute bytes of the compiled program (:func:`repro.obs.halo_traffic`,
+attributed to the ``dd-comm-halo`` named scope).
+
 Paper findings reproduced: XPINN comm >= cPINN comm (residual continuity needs
 second-derivative payload evaluation at interfaces); both weak-scale.
+
+Writes ``BENCH_scaling.json`` at the repo root (``BENCH_scaling_smoke.json``
+in smoke mode): one row per (method, n_sub) with separated comp/comm columns,
+comm fraction, halo bytes, and the worker's compile counts.
 """
-from benchmarks.common import emit, run_worker, save_json
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import REPO, emit, run_worker, save_json
 from benchmarks.scaling_common import worker_code
 
+BENCH_JSON = os.path.join(REPO, "BENCH_scaling.json")
 
-def run(sizes=(4, 8, 12), iters=5):
+
+def run(sizes=(4, 8, 12), iters=5, chunk=4, n_res=200, smoke=False):
     rows, raw = [], []
     for method in ("cpinn", "xpinn"):
         for n in sizes:
-            out = run_worker(worker_code(n, 1, method, n_res=200, n_iface=20,
-                                         iters=iters), n_devices=n)
+            out = run_worker(worker_code(n, 1, method, n_res=n_res, n_iface=20,
+                                         iters=iters, chunk=chunk),
+                             n_devices=n)
             raw.append({"method": method, **out})
-            rows.append((f"fig6/{method}/n{n}/comp", round(out["comp_only_s"] * 1e6, 1), "us"))
-            rows.append((f"fig6/{method}/n{n}/comm", round(out["comm_s"] * 1e6, 1), "us"))
+            us = lambda v: round(v * 1e6, 1)
+            rows.append((f"fig6/{method}/n{n}/comp", us(out["comp_s"]), "us"))
+            rows.append((f"fig6/{method}/n{n}/comm", us(out["comm_s"]), "us"))
+            rows.append((f"fig6/{method}/n{n}/comm_frac",
+                         round(out["comm_frac"], 4), "ratio"))
+            rows.append((f"fig6/{method}/n{n}/halo_bytes",
+                         round(out["collective_permute_bytes"], 1), "B"))
     save_json("fig6_comp_comm.json", raw)
+    _write_bench(raw, sizes, smoke)
     return rows
+
+
+def _write_bench(raw, sizes, smoke: bool) -> None:
+    """BENCH_scaling.json: the comp/comm-per-subdomain-count trajectory
+    (ROADMAP open item 1).  Columns per row: per-step comp/comm seconds, comm
+    fraction, analytic halo bytes, scope-attributed collective counts."""
+    bench = {
+        "workload": ("Burgers1D strip decomposition, width=20 depth=5, "
+                     "n_res=200/sub, n_iface=20, fused run_chunk "
+                     "(single dispatch, ppermute in scan body)"),
+        "protocol": ("repro.obs.comp_comm_split: interleaved paired rounds, "
+                     "comm = median(total - exchange_ablated), per step; "
+                     "halo bytes parsed from compiled HLO collective-permutes "
+                     "under the dd-comm-halo named scope"),
+        "sizes": list(sizes),
+        "rows": [
+            {
+                "method": r["method"],
+                "n_sub": r["n_sub"],
+                "comp_s": round(r["comp_s"], 6),
+                "comm_s": round(r["comm_s"], 6),
+                "total_s": round(r["total_s"], 6),
+                "comm_frac": round(r["comm_frac"], 4),
+                "halo_bytes_per_device": r["collective_permute_bytes"],
+                "collective_permute_ops": r["collective_permute_ops"],
+                "scope_op_counts": r.get("scope_op_counts", {}),
+                "compile": r.get("compile", {}),
+            }
+            for r in raw
+        ],
+    }
+    out = BENCH_JSON.replace(".json", "_smoke.json") if smoke else BENCH_JSON
+    with open(out, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"[fig6] wrote {out}")
 
 
 def main():

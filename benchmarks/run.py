@@ -24,7 +24,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig6,fig8,fig9,table2,fig13,serve,"
-                         "slo,ft,roofline")
+                         "slo,ft,obs,roofline")
     ap.add_argument("--quick", action="store_true", help="fewer sizes/iters")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-fast subset: tiny fig4 jvp-vs-pallas + "
@@ -34,8 +34,8 @@ def main() -> None:
 
     from benchmarks import (fig4_cost_profile, fig6_comp_comm, fig8_weak_scaling,
                             fig9_strong_scaling, fig13_inverse, ft_overhead,
-                            roofline, serve_slo, serve_throughput,
-                            table2_spacetime)
+                            obs_telemetry, roofline, serve_slo,
+                            serve_throughput, table2_spacetime)
 
     if args.smoke:
         # the pallas fig4 pass exercises BOTH custom-VJP backwards (fused
@@ -52,6 +52,9 @@ def main() -> None:
         # FAILS if any ticket is lost / the queue wedges / goodput under
         # faults drops below the floor
         rows += serve_slo.slo_smoke_rows()
+        # observability acceptance: telemetry-row overhead report, flat-line
+        # retrace assertions, schema-validated obs JSONL (malformed FAILS)
+        rows += obs_telemetry.smoke_rows()
         rows += roofline.residual_rows("both")
         emit(rows)
         return
@@ -70,6 +73,8 @@ def main() -> None:
         "serve": lambda: serve_throughput.run(iters=3 if quick else 5),
         "slo": lambda: serve_slo.run(smoke=quick),
         "ft": lambda: ft_overhead.run(iters=3 if quick else 10),
+        "obs": lambda: obs_telemetry.run(iters=3 if quick else 10,
+                                         smoke=quick),
         "roofline": roofline.run,
     }
     only = args.only.split(",") if args.only else list(suite)

@@ -1,43 +1,72 @@
 """Shared worker snippet for the distributed cPINN/XPINN scaling benchmarks
-(Figs 6-9, Table 2): runs N steps of the DistributedDDTrainer on a fake-device
-mesh and reports per-step wall time, with an optional exchange-disabled ablation
-(the paper's computation-vs-communication split)."""
+(Figs 6-9, Table 2): runs the FUSED single-dispatch chunk driver
+(``DistributedDDTrainer.run_chunk`` — lax.scan with the ppermute halo exchange
+inside the scan body) on a fake-device host mesh and reports:
+
+* the comp-vs-comm walltime split (:func:`repro.obs.comp_comm_split` —
+  interleaved paired rounds of the full chunk vs the exchange-ablated chunk,
+  per-step seconds), keeping the old ``total_s`` key so fig8/fig9/table2
+  consume the fused measurements unchanged;
+* the analytic halo traffic of the compiled chunk program
+  (:func:`repro.obs.halo_traffic` — collective-permute ops/bytes per device,
+  with the ``dd-comm-halo`` named-scope attribution);
+* the worker's compile counts (:class:`repro.obs.CompileWatcher`) so the
+  benchmark can assert compiles happen once, outside the timed rounds.
+"""
 from __future__ import annotations
 
 WORKER = """
-import json, time
+import json
 import numpy as np, jax
 from repro.core import *
 from repro.core.losses import METHODS
 from repro.core.nets import MLPConfig, SubdomainModelConfig
 from repro.data import make_batch
-from repro.utils import time_fn
+from repro.obs import CompileWatcher, comp_comm_split, halo_traffic
 
 nx, nt = {nx}, {nt}
 method = METHODS["{method}"]
 n_res, n_iface, width, depth = {n_res}, {n_iface}, {width}, {depth}
+chunk = {chunk}
 pde = Burgers1D()
 dec = CartesianDecomposition(((-1, 1), (0, 1)), nx, nt)
 topo = build_topology(dec, n_iface)
 cfg = SubdomainModelConfig(nets={{"u": MLPConfig(2, 1, width, depth)}})
 rng = np.random.default_rng(0)
-batch = make_batch(dec, topo, pde, n_res, 20, rng)
-b = batch.device_arrays()
+batch = make_batch(dec, topo, pde, n_res, 20, rng).device_arrays()
 
-out = {{"n_sub": dec.n_sub}}
-for tag, disable in [("total", False), ("comp_only", True)]:
+def runner(disable):
     tr = DistributedDDTrainer(pde, cfg, topo,
                               DDConfig(method=method, disable_exchange=disable),
                               lrs=1e-3)
-    st = tr.shard_state(tr.init(0))
-    bd = tr.shard_batch(b)
-    step = lambda: tr.step(st, bd)
-    out[tag + "_s"] = time_fn(lambda: tr.step(st, bd), iters={iters}, warmup=2)
-out["comm_s"] = max(0.0, out["total_s"] - out["comp_only_s"])
+    bd = tr.shard_batch(batch)
+    box = {{"st": tr.shard_state(tr.init(0))}}
+    def run():
+        st, terms = tr.run_chunk(box["st"], bd, chunk)
+        jax.block_until_ready(terms["loss"])
+        box["st"] = st          # donated buffers: rebind, never reuse
+    return tr, bd, run
+
+out = {{"n_sub": dec.n_sub, "chunk": chunk}}
+with CompileWatcher() as w:
+    tr, bd, run_total = runner(False)
+    _, _, run_comp = runner(True)
+    # analytic per-device halo traffic of the compiled fused-chunk program
+    # (lowered with a FRESH state: donation must never eat the timed state)
+    hlo = tr._build_chunk(chunk).lower(
+        tr.shard_state(tr.init(0)), bd).compile().as_text()
+    out.update(halo_traffic(hlo))
+    split = comp_comm_split(run_total, run_comp, iters={iters}, warmup=1,
+                            steps=chunk)
+out["compile"] = {{"backend_compiles": w.backend_compiles, "traces": w.traces}}
+out.update(split)
+out["comp_only_s"] = out["comp_s"]      # legacy key
 print("RESULT:" + json.dumps(out))
 """
 
 
-def worker_code(nx, nt, method, n_res=200, n_iface=20, width=20, depth=5, iters=5):
+def worker_code(nx, nt, method, n_res=200, n_iface=20, width=20, depth=5,
+                iters=5, chunk=4):
     return WORKER.format(nx=nx, nt=nt, method=method, n_res=n_res,
-                         n_iface=n_iface, width=width, depth=depth, iters=iters)
+                         n_iface=n_iface, width=width, depth=depth,
+                         iters=iters, chunk=chunk)

@@ -27,23 +27,30 @@ from repro.core.domain import Topology
 
 
 def exchange_ppermute(payload: jax.Array, topo: Topology, axis_name: str = "sub") -> jax.Array:
-    """payload: (K, n_iface, C) local per-device slot data -> received (K, n_iface, C)."""
-    outs = []
-    for k in range(topo.n_slots):
-        outs.append(
-            jax.lax.ppermute(payload[k], axis_name=axis_name, perm=topo.perms[k])
-        )
-    return jnp.stack(outs, axis=0)
+    """payload: (K, n_iface, C) local per-device slot data -> received (K, n_iface, C).
+
+    Bracketed by the ``dd-comm-halo`` named scope (repro.obs.profiling): every
+    collective-permute the chunk driver issues carries the scope in its HLO
+    op_name, so profilers and the comp/comm splitter attribute it to the
+    communication phase."""
+    with jax.named_scope("dd-comm-halo"):
+        outs = []
+        for k in range(topo.n_slots):
+            outs.append(
+                jax.lax.ppermute(payload[k], axis_name=axis_name, perm=topo.perms[k])
+            )
+        return jnp.stack(outs, axis=0)
 
 
 def exchange_gather(payload: jax.Array, topo: Topology) -> jax.Array:
     """payload: (n_sub, K, n_iface, C) stacked -> received, zeros where no neighbor."""
-    nbr = jnp.asarray(topo.neighbor)                    # (n_sub, K)
-    safe = jnp.maximum(nbr, 0)
-    k_idx = jnp.arange(topo.n_slots)[None, :]           # (1, K)
-    recv = payload[safe, k_idx]                         # (n_sub, K, n_iface, C)
-    mask = (nbr >= 0).astype(payload.dtype)[..., None, None]
-    return recv * mask
+    with jax.named_scope("dd-comm-halo"):
+        nbr = jnp.asarray(topo.neighbor)                # (n_sub, K)
+        safe = jnp.maximum(nbr, 0)
+        k_idx = jnp.arange(topo.n_slots)[None, :]       # (1, K)
+        recv = payload[safe, k_idx]                     # (n_sub, K, n_iface, C)
+        mask = (nbr >= 0).astype(payload.dtype)[..., None, None]
+        return recv * mask
 
 
 def exchange_tree_ppermute(payload: dict, topo: Topology, axis_name: str = "sub") -> dict:

@@ -76,6 +76,8 @@ class DDConfig:
     residual_path: str = "jvp"       # "jvp" (per-point closures) | "pallas" (fused kernel)
     backward_path: str = "fused"     # "fused" (hand-derived reverse sweep) | "ref"
                                      # (checkpointed jax.vjp oracle); pallas path only
+    telemetry: bool = False          # in-graph per-step metric rows (grad/param
+                                     # norms, iface mismatch, lr) on the terms
 
 
 @jax.tree_util.register_dataclass
@@ -107,6 +109,34 @@ def _nan_like(shapes):
     """NaN-filled pytree matching a ``jax.eval_shape`` result — the frozen
     branch's stand-in for the loss terms it did not compute."""
     return jax.tree.map(lambda s: jnp.full(s.shape, jnp.nan, s.dtype), shapes)
+
+
+# ------------------------------------------------------- in-graph telemetry
+
+def _telemetry_terms(terms: dict, params, grads, lr, stacked: bool) -> dict:
+    """Per-step metric rows riding the scan's ``terms`` output (EXPERIMENTS.md
+    §Observability).  Pure arithmetic on values the step already computed —
+    two parameter-tree reductions, a few scalar ops — so the chunk stays ONE
+    dispatch and the measured overhead is bounded at 2%:
+
+    * ``grad_norm`` / ``param_norm`` — L2 norms of the (last local step's)
+      loss gradient and the updated parameters, per subdomain on stacked
+      trees; the early-warning signals for the divergences the guard trips on;
+    * ``lr`` — the EFFECTIVE per-subdomain learning rate of this step
+      (includes the supervisor's recovery ``lr_scale`` backoff);
+    * ``iface_mismatch`` — RMS interface disagreement sqrt(MSE_avg + MSE_F/flux),
+      the paper's Figs 6-9 coupling-quality axis, when the loss has interface
+      terms (the data-parallel baseline has none).
+    """
+    norm = _stacked_sqnorm if stacked else _sqnorm
+    t = dict(terms)
+    t["grad_norm"] = jnp.sqrt(norm(grads))
+    t["param_norm"] = jnp.sqrt(norm(params))
+    t["lr"] = jnp.broadcast_to(jnp.asarray(lr, jnp.float32),
+                               t["loss"].shape)
+    if "mse_avg" in t:
+        t["iface_mismatch"] = jnp.sqrt(t["mse_avg"] + t["mse_iface"])
+    return t
 
 
 class _DDCommon:
@@ -223,7 +253,8 @@ class ReferenceTrainer(_DDCommon):
 
         # communicate once per outer step (Algorithm 1), then k local updates;
         # the exchange payload rides on inner step 1's forward
-        outs, vjp_fn = jax.vjp(net_eval, params)
+        with jax.named_scope("dd-comp-forward"):
+            outs, vjp_fn = jax.vjp(net_eval, params)
         own0 = outs[1]
         if self.cfg.disable_exchange:
             recv = self._maybe_stop(own0)
@@ -233,10 +264,14 @@ class ReferenceTrainer(_DDCommon):
         terms = None
         for i in range(self.cfg.local_steps):
             if i > 0:  # received payloads stay frozen; fresh forward on new params
-                outs, vjp_fn = jax.vjp(net_eval, params)
-            (_, terms), gouts = jax.value_and_grad(assemble_all, has_aux=True)(outs, recv)
-            (grads,) = vjp_fn(gouts)
-            params, opt = adam_lib.adam_update(grads, opt, params, lrs, self.cfg.adam)
+                with jax.named_scope("dd-comp-forward"):
+                    outs, vjp_fn = jax.vjp(net_eval, params)
+            with jax.named_scope("dd-comp-update"):
+                (_, terms), gouts = jax.value_and_grad(assemble_all, has_aux=True)(outs, recv)
+                (grads,) = vjp_fn(gouts)
+                params, opt = adam_lib.adam_update(grads, opt, params, lrs, self.cfg.adam)
+        if self.cfg.telemetry:
+            terms = _telemetry_terms(terms, params, grads, lrs, stacked=True)
         return (params, opt, step + 1), terms
 
     def _step(self, state: TrainState, batch: SubBatch) -> tuple[TrainState, dict]:
@@ -291,6 +326,10 @@ class ReferenceTrainer(_DDCommon):
         # after a trip the NaN terms would flag everyone — keep the trip-time
         # ok vector so the supervisor sees WHICH subdomains diverged
         ok_sub = jnp.where(all_ok, ok_sub & healthy, ok_sub)
+        if self.cfg.telemetry:
+            # per-step guard row: which subdomains were still ok AFTER this
+            # step (added outside the cond so the frozen branch records too)
+            terms = dict(terms, step_ok=ok_sub)
         return (inner, ok_sub, good + all_ok.astype(jnp.int32)), terms
 
     def _run_chunk_guarded(self, state, batch, steps, lr_scale):
@@ -350,7 +389,8 @@ class DistributedDDTrainer(_DDCommon):
             res, own, data_pred = outs
             return self._assemble(batch, res, own, data_pred, recv)
 
-        outs, vjp_fn = jax.vjp(net_eval, params)
+        with jax.named_scope("dd-comp-forward"):
+            outs, vjp_fn = jax.vjp(net_eval, params)
         own0 = outs[1]
         if cfg.disable_exchange:
             recv = self._maybe_stop(own0)
@@ -360,10 +400,14 @@ class DistributedDDTrainer(_DDCommon):
         terms = None
         for i in range(cfg.local_steps):
             if i > 0:
-                outs, vjp_fn = jax.vjp(net_eval, params)
-            (_, terms), gouts = jax.value_and_grad(assemble, has_aux=True)(outs, recv)
-            (grads,) = vjp_fn(gouts)
-            params, opt = adam_lib.adam_update(grads, opt, params, lr, cfg.adam)
+                with jax.named_scope("dd-comp-forward"):
+                    outs, vjp_fn = jax.vjp(net_eval, params)
+            with jax.named_scope("dd-comp-update"):
+                (_, terms), gouts = jax.value_and_grad(assemble, has_aux=True)(outs, recv)
+                (grads,) = vjp_fn(gouts)
+                params, opt = adam_lib.adam_update(grads, opt, params, lr, cfg.adam)
+        if cfg.telemetry:
+            terms = _telemetry_terms(terms, params, grads, lr, stacked=False)
         return params, opt, terms
 
     def _build_step(self):
@@ -468,6 +512,8 @@ class DistributedDDTrainer(_DDCommon):
                                              lambda a: (a, nan_terms), (p, o))
                 healthy = jnp.isfinite(terms["loss"]) & jnp.isfinite(_sqnorm(p))
                 ok = jnp.where(all_ok, ok & healthy, ok)
+                if self.cfg.telemetry:
+                    terms = dict(terms, step_ok=ok)
                 return ((p, o), ok, good + all_ok.astype(jnp.int32)), terms
 
             carry0 = ((p, o), jnp.ones((), bool), jnp.zeros((), jnp.int32))
@@ -542,12 +588,14 @@ class DataParallelTrainer:
         adam_cfg: adam_lib.AdamConfig = adam_lib.AdamConfig(),
         residual_path: str = "jvp",
         backward_path: str = "fused",
+        telemetry: bool = False,
     ):
         self.pde, self.model_cfg, self.weights = pde, model_cfg, weights
         self.n = n_workers
         self.lr = lr * (n_workers if scale_lr else 1)
         self.compression = compression
         self.adam_cfg = adam_cfg
+        self.telemetry = telemetry
         # activation comes from the model config (raises only on genuinely
         # unsupported configs: mixed per-net activations or an unknown name)
         self.act = nets.uniform_model_act(model_cfg)
@@ -593,13 +641,19 @@ class DataParallelTrainer:
                 batch, path=self.res_path,
             )
 
-        (_, terms), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        with jax.named_scope("dd-comp-forward"):
+            (_, terms), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
         if comp is not None:
             g, err_l = compress_decompress(g, err_l, comp)
         # the paper's distributed optimizer: allreduce-mean of loss gradients
         g = jax.lax.pmean(g, "sub")
-        new_params, new_opt = adam_lib.adam_update(g, opt, params, lr, self.adam_cfg)
+        with jax.named_scope("dd-comp-update"):
+            new_params, new_opt = adam_lib.adam_update(g, opt, params, lr, self.adam_cfg)
         terms = jax.lax.pmean(terms, "sub")
+        if self.telemetry:
+            # post-allreduce gradient and updated (replicated) params: rows are
+            # identical on every worker, matching the terms' P() out-spec
+            terms = _telemetry_terms(terms, new_params, g, lr, stacked=False)
         return new_params, new_opt, err_l, terms
 
     def _specs(self):
@@ -700,6 +754,8 @@ class DataParallelTrainer:
                                            lambda a: (a, nan_terms), args)
                 healthy = jnp.isfinite(terms["loss"]) & jnp.isfinite(_sqnorm(args[0]))
                 ok, good = ok & healthy, good + ok.astype(jnp.int32)
+                if self.telemetry:
+                    terms = dict(terms, step_ok=ok)
                 return (args, ok, good), terms
 
             carry0 = ((params, opt, err_l), jnp.ones((), bool),

@@ -8,9 +8,16 @@ field bundle (or a built-in demo bundle) under Poisson-arrival traffic, with
 the full production lifecycle:
 
 * **health/readiness heartbeat** — one JSON line per ``--heartbeat`` seconds
-  on stderr (breaker state, queue pressure, ladder level); ``--status-file``
+  on stderr (breaker state, queue pressure, ladder level, staged latency
+  percentiles: queue wait / dispatch / end-to-end); ``--status-file``
   additionally publishes the same snapshot atomically for external probes
-  (a readiness check is ``json.load(status)["ready"]``);
+  (a readiness check is ``json.load(status)["ready"]``) — the status schema
+  is documented in README.md §Serving telemetry;
+* **metrics + JSONL events** — ``--obs-jsonl`` streams schema-validated
+  events (manifest, heartbeats, final serve_report + metrics snapshot) to a
+  file via :mod:`repro.obs`; the registry spans the resilience layer and the
+  inner frontend, so one snapshot carries ``serve.resilience/*`` and
+  ``serve.frontend/*`` together;
 * **graceful draining** — SIGINT/SIGTERM (or the end of ``--duration``) stops
   admission (late submits are answered ``shed: draining``), flushes every
   queued request, then prints a final JSON report;
@@ -91,13 +98,28 @@ def _write_status(path: str, payload: dict) -> None:
     os.replace(tmp, path)   # atomic: probes never read a torn file
 
 
+def _latency_summary(frontend) -> dict:
+    """Compact staged-latency block for heartbeats/status: p50/p99/count per
+    stage (full histogram snapshots stay in ``stats()['latency']``)."""
+    out = {}
+    for stage, h in frontend.stats()["latency"].items():
+        out[stage] = {"p50": h["p50"], "p99": h["p99"], "count": h["count"]}
+    return out
+
+
 def run_server(frontend, sample_cloud, *, rate: float, duration: float,
                deadline: float | None = None, heartbeat: float = 1.0,
                status_file: str | None = None, seed: int = 0,
                max_requests: int | None = None,
                clock=time.monotonic, sleep=time.sleep) -> dict:
     """The serving loop: Poisson admission -> poll/flush -> heartbeat ->
-    drain.  Returns the final report dict (also printed as JSON)."""
+    drain.  Returns the final report dict (also printed as JSON).
+
+    Heartbeats and the status file carry the frontend health snapshot plus a
+    ``latency`` block (p50/p99/count per stage: queue wait, dispatch, e2e).
+    When the frontend carries an event sink (``ResilientFrontend(obs=...)``
+    with a JSONL path), each heartbeat and the final report are also emitted
+    as schema-validated events."""
     rng = np.random.default_rng(seed + 1)
     stop = {"sig": None}
 
@@ -121,11 +143,15 @@ def run_server(frontend, sample_cloud, *, rate: float, duration: float,
                 frontend.poll()
                 sleep(min(max(next_arrival - now, 0.0), 0.005))
             if now >= next_beat:
-                h = frontend.health()
+                h = {**frontend.health(),
+                     "latency": _latency_summary(frontend)}
                 print(json.dumps({"t": round(now - t0, 3), **h}),
                       file=sys.stderr, flush=True)
                 if status_file:
                     _write_status(status_file, h)
+                obs = getattr(frontend, "obs", None)
+                if obs is not None:
+                    obs.emit("heartbeat", status=h["status"])
                 next_beat += heartbeat
     finally:
         for s, h in old.items():
@@ -145,6 +171,7 @@ def run_server(frontend, sample_cloud, *, rate: float, duration: float,
         "requests": len(tickets),
         "by_status": by_status,
         "p50_s": pct(50), "p99_s": pct(99),
+        "latency": _latency_summary(frontend),
         "goodput": (sum(1 for r in results if r.ok) / len(tickets)
                     if tickets else 1.0),
         "degraded_frac": (sum(1 for r in results if r.degraded) / len(tickets)
@@ -155,7 +182,14 @@ def run_server(frontend, sample_cloud, *, rate: float, duration: float,
         "signal": stop["sig"],
     }
     if status_file:
-        _write_status(status_file, {**health, "final": True})
+        _write_status(status_file, {**health, "final": True,
+                                    "latency": report["latency"]})
+    obs = getattr(frontend, "obs", None)
+    if obs is not None:
+        obs.emit("serve_report", requests=len(tickets),
+                 goodput=report["goodput"])
+        if obs.events is not None:
+            obs.emit("metrics", snapshot=obs.registry.snapshot())
     print(json.dumps(report, indent=1))
     return report
 
@@ -186,6 +220,9 @@ def main(argv=None) -> int:
     ap.add_argument("--heartbeat", type=float, default=1.0)
     ap.add_argument("--status-file", default=None,
                     help="atomically published health JSON for probes")
+    ap.add_argument("--obs-jsonl", default=None,
+                    help="stream schema-validated obs events (manifest, "
+                         "heartbeats, serve_report, metrics) to this JSONL")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -203,13 +240,25 @@ def main(argv=None) -> int:
                            max_queue_points=args.queue_points,
                            max_queue_age=args.queue_age,
                            default_deadline=args.deadline)
-    fe = ResilientFrontend(engine, cfg, seed=args.seed)
+    obs = None
+    if args.obs_jsonl:
+        from repro.obs import make_obs
+        obs = make_obs(args.obs_jsonl, clock=time.monotonic,
+                       run_id=f"serve-{args.seed}",
+                       config={"rate": args.rate, "duration": args.duration,
+                               "order": cfg.order, "faults": args.faults})
+    fe = ResilientFrontend(engine, cfg, seed=args.seed, obs=obs)
     sampler = _cloud_sampler(bundle.decomp, args.seed)
     fe.query(sampler())   # compile warmup outside the measured traffic
-    report = run_server(fe, sampler, rate=args.rate, duration=args.duration,
-                        deadline=args.deadline, heartbeat=args.heartbeat,
-                        status_file=args.status_file, seed=args.seed,
-                        max_requests=args.max_requests)
+    try:
+        report = run_server(fe, sampler, rate=args.rate,
+                            duration=args.duration, deadline=args.deadline,
+                            heartbeat=args.heartbeat,
+                            status_file=args.status_file, seed=args.seed,
+                            max_requests=args.max_requests)
+    finally:
+        if obs is not None:
+            obs.close()
     return 0 if report["drained"]["unanswered"] == 0 else 1
 
 

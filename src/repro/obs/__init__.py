@@ -1,0 +1,77 @@
+"""Unified telemetry substrate: metrics registry, JSONL events, profiling.
+
+Dependency-free observability shared by training (``core.trainer`` telemetry
+rows, ``runtime.supervisor``), serving (``serve.frontend`` /
+``serve.resilience`` staged latency histograms), and the benchmarks
+(comp/comm split, retrace flatness).  See EXPERIMENTS.md §Observability for
+the metric catalog and the JSONL schema.
+
+Entry points:
+
+* :class:`MetricsRegistry` — counters / gauges / log-bucket histograms with
+  percentile export and ONE injectable clock;
+* :class:`EventLog` / :func:`validate_events` — JSONL event sink with a
+  per-run manifest and a strict, smoke-validated schema;
+* :class:`CompileWatcher` / :func:`comp_comm_split` / :func:`scope` —
+  compile/retrace counting, walltime comp-vs-comm splitting, and the
+  named-scope annotation vocabulary;
+* :class:`Obs` — the bundle the subsystems actually accept: a registry plus
+  an optional event log sharing its clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+from repro.obs.events import (EVENT_KINDS, EventLog, ObsSchemaError,
+                              SCHEMA_VERSION, read_events, validate_events)
+from repro.obs.profiling import (CompileWatcher, SCOPES, comp_comm_split,
+                                 compile_counts, halo_traffic, scope)
+from repro.obs.registry import (Counter, CounterGroup, Gauge, Histogram,
+                                MetricsRegistry)
+
+
+@dataclass
+class Obs:
+    """Registry + optional event sink, one clock.
+
+    Subsystems take ``obs: Obs | None``; ``None`` means "keep your own
+    private registry" (legacy behavior, zero overhead change).  Build with
+    :func:`make_obs` so the event log inherits the registry clock.
+    """
+
+    registry: MetricsRegistry
+    events: EventLog | None = None
+
+    @property
+    def clock(self):
+        return self.registry.clock
+
+    def emit(self, kind: str, **fields) -> None:
+        """Emit an event iff a sink is attached (metrics-only Obs is legal)."""
+        if self.events is not None:
+            self.events.emit(kind, **fields)
+
+    def close(self) -> None:
+        if self.events is not None:
+            self.events.close()
+
+
+def make_obs(jsonl_path: str | None = None, clock=time.perf_counter,
+             run_id: str | None = None, config: dict | None = None) -> Obs:
+    """One-call setup: registry (+ JSONL event log when a path is given),
+    sharing ``clock``."""
+    reg = MetricsRegistry(clock=clock)
+    ev = (EventLog(jsonl_path, clock=clock, run_id=run_id, config=config)
+          if jsonl_path else None)
+    return Obs(registry=reg, events=ev)
+
+
+__all__ = [
+    "Counter", "CounterGroup", "Gauge", "Histogram", "MetricsRegistry",
+    "EventLog", "ObsSchemaError", "read_events", "validate_events",
+    "EVENT_KINDS", "SCHEMA_VERSION",
+    "CompileWatcher", "SCOPES", "comp_comm_split", "compile_counts",
+    "halo_traffic", "scope",
+    "Obs", "make_obs",
+]

@@ -1,0 +1,197 @@
+"""Profiling hooks: named scopes, compile/retrace counting, comp-vs-comm split.
+
+Three tools that turn the repo's recurring forensic questions into one-line
+assertions:
+
+* **named-scope annotation scheme** — :func:`scope` extends the PR-4
+  ``pinn2-bwd-*`` convention to the whole chunk driver: communication is
+  bracketed ``dd-comm-halo`` (the ppermute/gather interface exchange), compute
+  ``dd-comp-forward`` / ``dd-comp-update`` (megabatched network entry + loss
+  backward + Adam).  The scopes land in compiled-HLO ``op_name`` metadata, so
+  tests and the comp/comm splitter can attribute ops by phase
+  (:func:`repro.utils.hlo.named_scope_counts`) instead of guessing;
+
+* **compile/retrace counter** — :class:`CompileWatcher` counts
+  ``jax.monitoring`` compile events process-wide (backend compiles, jaxpr
+  traces, and compile seconds).  Cache-hit dispatches emit ZERO events
+  (probe-verified), so "no retracing across batch buckets / lr_scale changes /
+  guarded chunks" is a flat-line assertion — PR 4 spent a full investigation
+  proving a serve regression was NOT retracing; with this counter that proof
+  is ``watcher.backend_compiles == 0``;
+
+* **comp-vs-comm walltime splitter** — :func:`comp_comm_split` times the full
+  chunk (ppermute halo exchange inside the scan body) against the
+  exchange-ablated chunk (``disable_exchange=True`` replaces comm with the
+  local payload, keeping compute identical) in INTERLEAVED rounds with paired
+  per-round statistics — the drift-robust protocol every benchmark here uses —
+  and reports comp/comm/total per step.  :func:`halo_traffic` complements the
+  walltime split with the analytic per-device collective-permute bytes parsed
+  from the compiled chunk HLO (:mod:`repro.utils.hlo`), i.e. the paper's
+  O(N_iface) communication-cost argument, measured.
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+
+import jax
+import numpy as np
+
+# The annotation scheme: one stable name per phase.  Keys are the phase
+# vocabulary ("comm", "comp_forward", ...), values the HLO-visible scope
+# names.  pinn2-bwd-* (PR 4) are listed so one table documents every marker.
+SCOPES = {
+    "comm": "dd-comm-halo",
+    "comp_forward": "dd-comp-forward",
+    "comp_update": "dd-comp-update",
+    "bwd_fused": "pinn2-bwd-fused",
+    "bwd_ref": "pinn2-bwd-ref",
+    "bwd_fused_select": "pinn2-bwd-fused-select",
+}
+
+
+def scope(phase: str):
+    """``with scope("comm"): ...`` — named scope from the phase vocabulary
+    (unknown phases raise: the scheme only works if names stay canonical)."""
+    try:
+        return jax.named_scope(SCOPES[phase])
+    except KeyError:
+        raise ValueError(f"unknown profiling phase {phase!r}; "
+                         f"known: {sorted(SCOPES)}") from None
+
+
+# ------------------------------------------------------- compile/retrace count
+
+_EVENTS = {
+    "/jax/core/compile/backend_compile_duration": "backend_compiles",
+    "/jax/core/compile/jaxpr_trace_duration": "traces",
+}
+_counts: dict[str, int] = defaultdict(int)
+_seconds: dict[str, float] = defaultdict(float)
+_installed = False
+
+
+def _install() -> None:
+    """Register the process-wide listener once (jax.monitoring has no
+    unregister; a single accumulating listener + snapshot deltas avoids
+    ever needing one)."""
+    global _installed
+    if _installed:
+        return
+    import jax.monitoring as monitoring
+
+    def _listener(event: str, duration: float, **_kw) -> None:
+        key = _EVENTS.get(event)
+        if key is not None:
+            _counts[key] += 1
+            _seconds[key] += duration
+
+    monitoring.register_event_duration_secs_listener(_listener)
+    _installed = True
+
+
+def compile_counts() -> dict:
+    """Process-lifetime compile/trace counts (monotone; diff two snapshots
+    or use :class:`CompileWatcher` for scoped deltas)."""
+    _install()
+    return {"backend_compiles": _counts["backend_compiles"],
+            "traces": _counts["traces"],
+            "compile_seconds": round(_seconds["backend_compiles"], 6)}
+
+
+class CompileWatcher:
+    """Scoped compile-event delta: ``with CompileWatcher() as w: ...`` then
+    ``w.backend_compiles`` / ``w.traces`` / ``w.compile_seconds``.
+
+    A cache-hit jit dispatch emits no events, so asserting
+    ``w.backend_compiles == 0`` over a serving loop IS the no-retrace-storm
+    regression test.  Optionally mirrors the delta into a registry
+    (``obs.compile/*`` counters) and an event log (``compile`` event).
+    """
+
+    def __init__(self, registry=None, events=None):
+        _install()
+        self._registry, self._events = registry, events
+        self.backend_compiles = self.traces = 0
+        self.compile_seconds = 0.0
+
+    def __enter__(self):
+        self._c0 = dict(_counts)
+        self._s0 = dict(_seconds)
+        return self
+
+    def __exit__(self, *exc):
+        self.backend_compiles = (_counts["backend_compiles"]
+                                 - self._c0.get("backend_compiles", 0))
+        self.traces = _counts["traces"] - self._c0.get("traces", 0)
+        self.compile_seconds = (_seconds["backend_compiles"]
+                                - self._s0.get("backend_compiles", 0.0))
+        if self._registry is not None:
+            g = self._registry.group("obs.compile",
+                                     ("backend_compiles", "traces"))
+            g["backend_compiles"] += self.backend_compiles
+            g["traces"] += self.traces
+        if self._events is not None:
+            self._events.emit("compile", backend_compiles=self.backend_compiles,
+                              traces=self.traces,
+                              compile_seconds=round(self.compile_seconds, 6))
+        return False
+
+
+# ------------------------------------------------------------- comp/comm split
+
+def comp_comm_split(run_total, run_comp_only, iters: int = 5,
+                    warmup: int = 1, steps: int = 1,
+                    clock=time.perf_counter) -> dict:
+    """Wall-time comp-vs-comm split of a chunked training step.
+
+    ``run_total`` runs one chunk WITH the halo exchange; ``run_comp_only``
+    runs the identical chunk with the exchange ablated
+    (``DDConfig.disable_exchange=True``: the loss consumes the local payload,
+    so compute is identical and the difference is the communication term —
+    the paper's Fig-6 protocol).  Both callables must block until ready and
+    handle their own state rebinding (donated buffers).
+
+    Timed in interleaved rounds (total, comp, total, comp, ...) so the
+    container's CPU-quota drift hits both paths equally; ``comm`` is the
+    median of PAIRED per-round differences, floored at 0 (a noisy round can
+    go negative).  ``steps`` divides everything down to per-step seconds.
+    """
+    for _ in range(max(warmup, 1)):
+        run_total()
+        run_comp_only()
+    t_tot, t_comp = [], []
+    for _ in range(iters):
+        t0 = clock()
+        run_total()
+        t_tot.append(clock() - t0)
+        t0 = clock()
+        run_comp_only()
+        t_comp.append(clock() - t0)
+    tot, comp = np.asarray(t_tot), np.asarray(t_comp)
+    comm = float(np.median(tot - comp))
+    return {
+        "total_s": float(np.median(tot)) / steps,
+        "comp_s": float(np.median(comp)) / steps,
+        "comm_s": max(0.0, comm) / steps,
+        "comm_frac": max(0.0, comm) / max(float(np.median(tot)), 1e-30),
+        "rounds": int(iters),
+    }
+
+
+def halo_traffic(hlo_text: str) -> dict:
+    """Analytic per-device halo-exchange traffic of a compiled chunk: the
+    collective-permute byte/op accounting (:mod:`repro.utils.hlo`) plus the
+    named-scope attribution — how many collective ops sit under the
+    ``dd-comm-halo`` scope (all of them, if the annotation scheme holds)."""
+    from repro.utils import hlo as hlo_lib
+
+    coll = hlo_lib.collective_bytes(hlo_text)
+    scopes = hlo_lib.named_scope_counts(hlo_text, prefix="dd-")
+    return {
+        "collective_permute_ops": coll["counts"].get("collective-permute", 0),
+        "collective_permute_bytes":
+            coll["bytes_by_kind"].get("collective-permute", 0.0),
+        "total_collective_bytes": coll["total_bytes"],
+        "scope_op_counts": scopes,
+    }

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
+from repro.obs import MetricsRegistry, Obs
 from repro.optim import adam as adam_lib
 from repro.runtime import elastic
 from repro.runtime.failures import FaultInjector, InjectedFailure, inject_nan
@@ -123,16 +124,42 @@ class Supervisor:
     is an optional chunk-granular :class:`FaultInjector` (tests/benchmarks);
     ``decomp`` (optional) stamps the decomposition signature into checkpoint
     metadata so the run can restart elastically.
+
+    Telemetry (EXPERIMENTS.md §Observability): ``obs`` plugs in a shared
+    :class:`~repro.obs.Obs` bundle — every walltime/recovery measurement goes
+    through its injectable clock (so tests stub time instead of sleeping), the
+    ``train.supervisor/*`` counters mirror the :class:`SupervisorReport` ints
+    under the registry's one naming scheme, chunk walltimes and recovery
+    latencies feed ``train.supervisor/{chunk_walltime_s,recovery_s}``
+    histograms, and chunk/crash/guard_trip/straggler/rollback events stream to
+    the JSONL sink when one is attached.  ``sleep`` is the straggler-delay
+    sleeper (stub it together with the clock).  Without ``obs`` the supervisor
+    keeps a private registry — behavior is unchanged.
     """
 
     def __init__(self, trainer, root: str, cfg: SupervisorConfig = SupervisorConfig(),
-                 injector: FaultInjector | None = None, decomp=None):
+                 injector: FaultInjector | None = None, decomp=None,
+                 obs: Obs | None = None, sleep=time.sleep):
         self.trainer, self.root, self.cfg = trainer, str(root), cfg
         self.injector = injector or FaultInjector()
         self.decomp = decomp
         self.lr_scale: np.ndarray | None = None   # lazy: shape from health
         self.report = SupervisorReport()
         self._restarts = 0
+        self.obs = obs if obs is not None else Obs(registry=MetricsRegistry())
+        self._clock, self._sleep = self.obs.clock, sleep
+        reg = self.obs.registry
+        self._counters = reg.group(
+            "train.supervisor",
+            ("chunks", "restarts", "crashes", "guard_trips", "stragglers"))
+        self._h_wall = reg.histogram("train.supervisor/chunk_walltime_s")
+        self._h_rec = reg.histogram("train.supervisor/recovery_s")
+
+    def _bump(self, key: str) -> None:
+        """One increment, two views: the registry counter (the naming scheme)
+        and the legacy :class:`SupervisorReport` int."""
+        self._counters[key] += 1
+        setattr(self.report, key, getattr(self.report, key) + 1)
 
     # ------------------------------------------------------------- checkpoint
     def _metadata(self, state_tree: dict) -> dict:
@@ -152,7 +179,7 @@ class Supervisor:
 
     def _rollback(self, like) -> object:
         self._restarts += 1
-        self.report.restarts += 1
+        self._bump("restarts")
         if self._restarts > self.cfg.max_restarts:
             raise RuntimeError(
                 f"supervisor: restart budget exhausted "
@@ -197,14 +224,16 @@ class Supervisor:
             n = min(cfg.chunk_steps, total_steps - done)
             faults = self.injector.take(attempt)
             attempt += 1
-            t0 = time.perf_counter()
+            t0 = self._clock()
             try:
                 for f in faults:
                     if f.kind == "straggler":
-                        self.report.stragglers += 1
+                        self._bump("stragglers")
                         self.report.events.append(
                             f"straggler +{f.delay:.2f}s at chunk {attempt - 1}")
-                        time.sleep(f.delay)
+                        self.obs.emit("straggler", chunk=attempt - 1,
+                                      delay_s=float(f.delay))
+                        self._sleep(f.delay)
                     elif f.kind in ("nan_params", "nan_grads"):
                         self.report.events.append(
                             f"{f.kind} injected at chunk {attempt - 1} "
@@ -221,32 +250,50 @@ class Supervisor:
                         raise InjectedFailure(
                             f"injected crash at chunk {attempt - 1}")
             except InjectedFailure as e:
-                self.report.crashes += 1
+                self._bump("crashes")
                 self.report.events.append(str(e))
-                t_r = time.perf_counter()
+                self.obs.emit("crash", chunk=attempt - 1)
+                t_r = self._clock()
                 state = self._rollback(state)
-                self.report.recovery_s.append(time.perf_counter() - t_r)
+                rec = self._clock() - t_r
+                self.report.recovery_s.append(rec)
+                self._h_rec.record(rec)
                 done = int(np.asarray(_as_tree(state)["step"]))
+                self.obs.emit("rollback", step=done, recovery_s=rec)
                 continue
             if not bool(health["ok"]):
                 bad = np.flatnonzero(~np.atleast_1d(np.asarray(health["ok_sub"])))
-                self.report.guard_trips += 1
+                self._bump("guard_trips")
                 self.report.events.append(
                     f"guard trip at chunk {attempt - 1}: subdomains "
                     f"{bad.tolist()} non-finite after "
                     f"{int(health['good_steps'])} steps — rolling back with "
                     f"lr backoff x{cfg.lr_backoff}")
+                self.obs.emit("guard_trip", chunk=attempt - 1,
+                              bad_subdomains=bad.tolist(),
+                              good_steps=int(health["good_steps"]))
                 self._apply_backoff(health)
-                t_r = time.perf_counter()
+                t_r = self._clock()
                 state = self._rollback(state)
-                self.report.recovery_s.append(time.perf_counter() - t_r)
+                rec = self._clock() - t_r
+                self.report.recovery_s.append(rec)
+                self._h_rec.record(rec)
                 done = int(np.asarray(_as_tree(state)["step"]))
+                self.obs.emit("rollback", step=done, recovery_s=rec)
                 continue
             # committed
             done += n
             committed += 1
-            self.report.chunks += 1
-            self.report.walltimes.append(time.perf_counter() - t0)
+            self._bump("chunks")
+            wall = self._clock() - t0
+            self.report.walltimes.append(wall)
+            self._h_wall.record(wall)
+            if self.obs.events is not None:
+                # last committed step's mean loss (terms are concrete already)
+                last = np.asarray(terms["loss"])[-1]
+                self.obs.emit("chunk", step=done, steps=n,
+                              loss=float(np.nanmean(last)),
+                              walltime_s=float(wall))
             if committed % cfg.ckpt_every_chunks == 0 or done >= total_steps:
                 self._save(state)
         return state, self.report

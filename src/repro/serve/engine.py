@@ -60,10 +60,14 @@ class FieldEngine:
 
     def __init__(self, bundle: FieldBundle, tol: float = 1e-9,
                  bucket: int = 64, block_n: int = 256,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, obs=None):
         self.bundle = bundle
         self.tol, self.bucket = tol, bucket
         self.block_n, self.interpret = block_n, interpret
+        # optional telemetry (repro.obs.Obs): per-evaluate dispatch counter
+        # and duration histogram under serve.engine/* — None keeps the engine
+        # dependency-free for library callers
+        self.obs = obs
         codes = np.asarray(
             bundle.act_codes if bundle.act_codes is not None
             else np.zeros((bundle.n_sub,), np.int32), np.int32)
@@ -140,8 +144,18 @@ class FieldEngine:
         """
         routed = self._route(pts)
         fn = self._get_fn(order)
+        t0 = self.obs.clock() if self.obs is not None else None
         outs = fn(*self._device_args(routed))
+        out = {}
+        claims = routed.claims
+        for k, v in outs.items():
+            out[k] = _stitch(routed, np.asarray(v), claims)  # blocks on device
         self.n_dispatches += 1
-        claims = self.last_claims = routed.claims
-        return {k: _stitch(routed, np.asarray(v), claims)
-                for k, v in outs.items()}
+        self.last_claims = claims
+        if self.obs is not None:
+            reg = self.obs.registry
+            reg.counter("serve.engine/dispatches").inc()
+            reg.counter("serve.engine/points").inc(len(claims))
+            reg.histogram("serve.engine/dispatch_s").record(
+                self.obs.clock() - t0)
+        return out

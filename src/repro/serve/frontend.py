@@ -19,8 +19,15 @@ frontend fixes both without threads or external deps:
 * **failure isolation** — a failing microbatch is bisected so one poisoned
   cloud is quarantined (requeued at the tail) while its healthy batch-mates
   are served from the same flush;
-* **counters** — requests / points / hit rate / dispatches / evaluation
-  seconds, for the throughput benchmark and ops dashboards.
+* **counters + staged latency** — requests / points / hit rate / dispatches /
+  evaluation seconds live in a :class:`~repro.obs.MetricsRegistry` under
+  ``serve.frontend/*`` (``self.counters`` is a dict-shaped view, so the
+  legacy ``stats()`` shape is unchanged); per-request **queue wait** (enqueue
+  -> dispatch) and per-microbatch **dispatch** (engine evaluation) durations
+  feed ``serve.frontend/{queue_wait_s,dispatch_s}`` histograms, and each
+  ticket's stage times are stashed for the resilience layer's end-to-end
+  breakdown.  Pass ``obs`` to share a registry (and its clock's event log)
+  across subsystems; omit it for a private registry (legacy behavior).
 
 Admission control, deadlines, degraded modes, and retry policy live one layer
 up in :mod:`repro.serve.resilience`.
@@ -37,6 +44,7 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, Obs
 from repro.serve.engine import FieldEngine
 
 
@@ -55,7 +63,7 @@ class ServeFrontend:
                  max_batch: int = 16384, cache_size: int = 64,
                  cache_points: int | None = 1 << 22,
                  max_queue_age: float | None = None,
-                 clock=time.monotonic):
+                 clock=time.monotonic, obs: Obs | None = None):
         self.engine = engine
         self.order = order
         self.max_batch = max_batch
@@ -69,10 +77,21 @@ class ServeFrontend:
         self._pending: list[tuple[int, np.ndarray, tuple, float]] = []
         self._results: dict[int, dict] = {}
         self._next_ticket = 0
-        self.counters = {"requests": 0, "points": 0, "cache_hits": 0,
-                         "cache_misses": 0, "dispatches": 0,
-                         "dispatched_points": 0, "eval_seconds": 0.0,
-                         "deadline_flushes": 0, "quarantined": 0}
+        self.obs = obs
+        reg = obs.registry if obs is not None else MetricsRegistry(clock=clock)
+        self.registry = reg
+        self.counters = reg.group(
+            "serve.frontend",
+            ("requests", "points", "cache_hits", "cache_misses", "dispatches",
+             "dispatched_points", "eval_seconds", "deadline_flushes",
+             "quarantined"))
+        self._h_queue_wait = reg.histogram("serve.frontend/queue_wait_s")
+        self._h_dispatch = reg.histogram("serve.frontend/dispatch_s")
+        # ticket -> {"queue_wait_s", "dispatch_s"}; recorded when the answer
+        # lands, popped with result() — the resilience layer reads it for the
+        # end-to-end latency breakdown
+        self.stage_times: dict[int, dict] = {}
+        self.last_stage: dict | None = None
 
     # ------------------------------------------------------------- caching
     def _cache_get(self, key: tuple) -> dict | None:
@@ -112,6 +131,7 @@ class ServeFrontend:
         if cached is not None:
             self.counters["cache_hits"] += 1
             self._results[ticket] = cached
+            self.stage_times[ticket] = {"queue_wait_s": 0.0, "dispatch_s": 0.0}
         else:
             self.counters["cache_misses"] += 1
             self._pending.append((ticket, pts, key, self._clock()))
@@ -176,9 +196,10 @@ class ServeFrontend:
         """One microbatch dispatch; on failure, bisect to isolate the poison."""
         cloud = np.concatenate([pts for _, pts, _ in batch], axis=0)
         try:
-            t0 = time.perf_counter()
+            t0 = self._clock()
             out = self.engine.evaluate(cloud, order=self.order)
-            self.counters["eval_seconds"] += time.perf_counter() - t0
+            dt = self._clock() - t0
+            self.counters["eval_seconds"] += dt
         except Exception as exc:
             if len(batch) == 1:   # isolated: this cloud is the poison
                 self.counters["quarantined"] += 1
@@ -190,6 +211,7 @@ class ServeFrontend:
             return
         self.counters["dispatches"] += 1
         self.counters["dispatched_points"] += len(cloud)
+        self._h_dispatch.record(dt)
         ofs = 0
         for key, pts, toks in batch:
             n = len(pts)
@@ -204,8 +226,11 @@ class ServeFrontend:
                 res[k] = arr
             ofs += n
             self._cache_put(key, res)
-            for t, _enq in toks:
+            for t, enq in toks:
                 self._results[t] = res
+                wait = max(0.0, t0 - enq)
+                self._h_queue_wait.record(wait)
+                self.stage_times[t] = {"queue_wait_s": wait, "dispatch_s": dt}
 
     # ------------------------------------------------------------- results
     def ready(self, ticket: int) -> bool:
@@ -226,7 +251,9 @@ class ServeFrontend:
     def result(self, ticket: int) -> dict:
         """Pop a ticket's result.  A still-pending ticket auto-flushes the
         queue (it used to ``KeyError`` opaquely); an unknown or already-popped
-        ticket raises :class:`UnknownTicketError`."""
+        ticket raises :class:`UnknownTicketError`.  The ticket's stage times
+        (queue wait / dispatch seconds) move to ``self.last_stage`` for the
+        resilience layer's latency breakdown."""
         self.poll()
         if ticket not in self._results:
             if any(t == ticket for t, _p, _k, _e in self._pending):
@@ -235,6 +262,7 @@ class ServeFrontend:
                 raise UnknownTicketError(
                     f"ticket {ticket}: never issued or already retrieved "
                     f"(results are handed out once)")
+        self.last_stage = self.stage_times.pop(ticket, None)
         return self._results.pop(ticket)
 
     def query(self, pts) -> dict:
@@ -254,4 +282,6 @@ class ServeFrontend:
         # dividing cache-served traffic by dispatch time would inflate it
         c["points_per_sec"] = (c["dispatched_points"] / c["eval_seconds"]
                                if c["eval_seconds"] > 0 else float("inf"))
+        c["latency"] = {"queue_wait_s": self._h_queue_wait.snapshot(),
+                        "dispatch_s": self._h_dispatch.snapshot()}
         return c

@@ -41,6 +41,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.obs import MetricsRegistry, Obs
 from repro.serve import routing
 from repro.serve.frontend import ServeFrontend, UnknownTicketError, _signature
 
@@ -144,7 +145,10 @@ class ServeResult:
     order: int | None = None
     degraded: bool = False
     reason: str = ""
-    latency: float | None = None   # answer clock - admission clock
+    latency: float | None = None      # end-to-end: answer clock - admission clock
+    queue_wait: float | None = None   # inner-queue wait (enqueue -> dispatch)
+    dispatch: float | None = None     # engine evaluation seconds of the
+                                      # microbatch that served this request
 
     @property
     def ok(self) -> bool:
@@ -191,12 +195,16 @@ class ResilientFrontend:
 
     def __init__(self, engine, config: ResilienceConfig | None = None,
                  clock=time.monotonic, sleep=time.sleep, seed: int = 0,
-                 **frontend_kwargs):
+                 obs: Obs | None = None, **frontend_kwargs):
         self.cfg = config or ResilienceConfig()
         self.guard = GuardedEngine(engine)
         self.engine = engine
+        # one registry spans this layer AND the inner frontend, so a single
+        # snapshot reads serve.resilience/* next to serve.frontend/*
+        self.obs = obs if obs is not None else Obs(
+            registry=MetricsRegistry(clock=clock))
         self._fe = ServeFrontend(self.guard, order=self.cfg.order,
-                                 clock=clock, **frontend_kwargs)
+                                 clock=clock, obs=self.obs, **frontend_kwargs)
         self._clock, self._sleep = clock, sleep
         self._rng = np.random.default_rng(seed)
         self.breaker = CircuitBreaker(self.cfg.breaker_threshold,
@@ -208,12 +216,14 @@ class ResilientFrontend:
         self._answered = 0             # answers recorded (ever), incl. retrieved
         self.draining = False
         self.level = 0                  # last ladder level used by flush
-        self.counters = {
-            "admitted": 0, "served": 0, "served_cache": 0, "degraded": 0,
-            "shed_overload": 0, "shed_draining": 0, "shed_cache_only": 0,
-            "shed_breaker_open": 0, "deadline_exceeded": 0, "failed": 0,
-            "retries": 0, "flush_failures": 0,
-        }
+        reg = self.obs.registry
+        self.counters = reg.group("serve.resilience", (
+            "admitted", "served", "served_cache", "degraded",
+            "shed_overload", "shed_draining", "shed_cache_only",
+            "shed_breaker_open", "deadline_exceeded", "failed",
+            "retries", "flush_failures",
+        ))
+        self._h_e2e = reg.histogram("serve.resilience/e2e_s")
 
     # ----------------------------------------------------------- answering
     def _answer(self, q_or_ticket, res: ServeResult) -> None:
@@ -223,6 +233,7 @@ class ResilientFrontend:
             ticket, admitted = q_or_ticket, self._clock()
         if res.latency is None:
             res.latency = max(0.0, self._clock() - admitted)
+        self._h_e2e.record(res.latency)
         self._results[ticket] = res
         self._answered += 1
         key = {"served": "served", "degraded": "degraded",
@@ -264,7 +275,8 @@ class ResilientFrontend:
         if hit is not None:
             self._fe.counters["cache_hits"] += 1
             self._answer(ticket, ServeResult("served", data=hit,
-                                             order=cfg.order, reason="cache"))
+                                             order=cfg.order, reason="cache",
+                                             queue_wait=0.0, dispatch=0.0))
             return ticket
         dl = deadline if deadline is not None else cfg.default_deadline
         self._queue.append(_Queued(
@@ -433,11 +445,14 @@ class ResilientFrontend:
         for q in list(alive.values()):
             if q.inner is not None and self._fe.ready(q.inner):
                 data = self._fe.result(q.inner)
+                stage = self._fe.last_stage or {}
                 degraded = q.order < self.cfg.order
                 self._answer(q, ServeResult(
                     "degraded" if degraded else "served", data=data,
                     order=q.order, degraded=degraded,
-                    reason="pressure" if degraded else ""))
+                    reason="pressure" if degraded else "",
+                    queue_wait=stage.get("queue_wait_s"),
+                    dispatch=stage.get("dispatch_s")))
 
     # ---------------------------------------------------------------- results
     def result(self, ticket: int) -> ServeResult:
@@ -498,4 +513,8 @@ class ResilientFrontend:
                         "deadline_exceeded", "failed"))
         c["answered"] = answered
         c["frontend"] = self._fe.stats()
+        # staged latency rollup: e2e here, queue wait + dispatch from the
+        # inner frontend's histograms (same registry, one naming scheme)
+        c["latency"] = {"e2e_s": self._h_e2e.snapshot(),
+                        **c["frontend"]["latency"]}
         return c

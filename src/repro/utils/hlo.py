@@ -89,6 +89,24 @@ def collective_bytes(hlo_text: str) -> dict:
     }
 
 
+def named_scope_counts(hlo_text: str, prefix: str = "dd-") -> dict[str, int]:
+    """Ops attributed to each ``jax.named_scope`` starting with ``prefix``.
+
+    Scope names appear as path components of the ``op_name`` metadata
+    (``jit(f)/.../dd-comm-halo/...``); counting ops per scope lets tests and
+    the comp/comm splitter assert the annotation scheme holds (e.g. every
+    collective-permute sits under ``dd-comm-halo``).  An op nested under two
+    matching scopes counts toward each (scopes are a hierarchy, not a
+    partition)."""
+    counts: dict[str, int] = defaultdict(int)
+    pat = re.compile(r'op_name="([^"]+)"')
+    for m in pat.finditer(hlo_text):
+        for part in m.group(1).split("/"):
+            if part.startswith(prefix):
+                counts[part] += 1
+    return dict(counts)
+
+
 def op_histogram(hlo_text: str, top: int = 25) -> list[tuple[str, int]]:
     """Crude opcode histogram of the entry/partitioned module (dup-spotting)."""
     ops = defaultdict(int)
