@@ -6,6 +6,12 @@ Wall-clock therefore measures algorithmic + collective overhead, not true
 parallel speedup — the paper's hardware-scaling story is carried by the dry-run
 roofline (EXPERIMENTS.md §Roofline).  Each benchmark prints ``name,value,unit``
 CSV rows and states which paper artifact it reproduces.
+
+Output layout: full-mode headline JSONs stay tracked at the repo root
+(``BENCH_*.json``); smoke-mode outputs go to the gitignored ``bench_out/``
+(:func:`bench_path`).  Every benchmark also appends its headline rows to the
+append-only ``BENCH_history.jsonl`` perf trajectory (:func:`history_append` →
+:mod:`repro.obs.trajectory`), which the ``--smoke`` regression gate reads.
 """
 from __future__ import annotations
 
@@ -17,6 +23,8 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 RESULTS = os.path.join(REPO, "benchmarks", "results")
+BENCH_OUT = os.path.join(REPO, "bench_out")
+HISTORY = os.path.join(REPO, "BENCH_history.jsonl")
 
 
 def run_worker(code: str, n_devices: int = 1, timeout: int = 1200,
@@ -51,3 +59,55 @@ def save_json(name: str, obj) -> str:
     with open(path, "w") as f:
         json.dump(obj, f, indent=1)
     return path
+
+
+def bench_path(name: str, smoke: bool = False) -> str:
+    """Headline-JSON output path: full runs keep the tracked repo-root
+    ``BENCH_<name>.json``; smoke runs land in the gitignored ``bench_out/``
+    so CI passes never dirty the tree."""
+    if not smoke:
+        return os.path.join(REPO, f"BENCH_{name}.json")
+    os.makedirs(BENCH_OUT, exist_ok=True)
+    return os.path.join(BENCH_OUT, f"BENCH_{name}_smoke.json")
+
+
+# run.py --smoke arms this: history appends buffer here so the regression
+# gate can compare the fresh rows against trailing history BEFORE they are
+# recorded (a regressing run must not become part of its own baseline)
+_DEFERRED: list | None = None
+
+
+def history_append(bench: str, rows, smoke: bool = False):
+    """Append this run's headline rows to the perf trajectory
+    (``BENCH_history.jsonl``), keyed on git SHA + bench id + mode.  Smoke and
+    full runs never share a baseline (different workload sizes)."""
+    mode = "smoke" if smoke else "full"
+    if _DEFERRED is not None:
+        _DEFERRED.append((bench, list(rows), mode))
+        return None
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.obs.trajectory import append_record
+
+    return append_record(HISTORY, bench, rows, mode=mode)
+
+
+def defer_history() -> None:
+    """Buffer subsequent :func:`history_append` calls until
+    :func:`flush_history_gate` (the ``--smoke`` gate protocol)."""
+    global _DEFERRED
+    _DEFERRED = []
+
+
+def flush_history_gate() -> list[dict]:
+    """Gate every deferred bench's rows against its trailing history, then
+    record them.  Raises :class:`repro.obs.trajectory.PerfRegressionError`
+    on the first tripped bench — WITHOUT recording it."""
+    global _DEFERRED
+    pending, _DEFERRED = _DEFERRED or [], None
+    if SRC not in sys.path:
+        sys.path.insert(0, SRC)
+    from repro.obs.trajectory import gate
+
+    return [gate(HISTORY, bench, rows, mode=mode)
+            for bench, rows, mode in pending]

@@ -41,10 +41,7 @@ from repro.core.domain import CartesianDecomposition
 from repro.core.pdes import Burgers1D
 from repro.data import make_vanilla_batch
 
-from benchmarks.common import REPO, emit
-
-BENCH_JSON = os.path.join(REPO, "BENCH_residual.json")
-BENCH_STEP_JSON = os.path.join(REPO, "BENCH_step.json")
+from benchmarks.common import REPO, bench_path, emit, history_append
 
 
 def _phases(pde, cfg, params, batch, res_path: ResidualPath | None = None):
@@ -199,13 +196,14 @@ def run(iters: int = 10, path: str = "jvp", smoke: bool = False):
             one(f"width={width}", 10000, 8, width)
 
     if pallas:
-        # smoke runs get their own file so a CI smoke pass never clobbers the
-        # full-grid measurement artifact that EXPERIMENTS.md cites
-        out = BENCH_JSON.replace(".json", "_smoke.json") if smoke else BENCH_JSON
+        # smoke runs get their own gitignored file so a CI smoke pass never
+        # clobbers the full-grid measurement artifact EXPERIMENTS.md cites
+        out = bench_path("residual", smoke)
         with open(out, "w") as f:
             json.dump({"unit": "us", "backend": jax.default_backend(),
                        "iters": iters, "rows": records}, f, indent=1)
         print(f"wrote {out}")
+    history_append("fig4", rows, smoke=smoke)
     return rows
 
 
@@ -323,7 +321,7 @@ def run_e2e(iters: int = 3, smoke: bool = False):
     bwd_e2e = round(records["pallas"]["chunk_it_s"]
                     / records["pallas-refbwd"]["chunk_it_s"], 3)
     rows.append(("fig4/e2e/bwd_fused_vs_ref_chunk_speedup", bwd_e2e, "x"))
-    out = BENCH_STEP_JSON.replace(".json", "_smoke.json") if smoke else BENCH_STEP_JSON
+    out = bench_path("step", smoke)
     with open(out, "w") as f:
         json.dump({
             "workload": f"quickstart 2x2 Burgers XPINN, n_res={n_res}, "
@@ -338,6 +336,7 @@ def run_e2e(iters: int = 3, smoke: bool = False):
             "dispatches_per_100_steps": {"loop": 100, "chunk": round(100 / steps, 2)},
         }, f, indent=1)
     print(f"wrote {out}")
+    history_append("fig4_e2e", rows, smoke=smoke)
     return rows
 
 

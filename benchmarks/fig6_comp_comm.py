@@ -19,12 +19,10 @@ comm fraction, halo bytes, and the worker's compile counts.
 from __future__ import annotations
 
 import json
-import os
 
-from benchmarks.common import REPO, emit, run_worker, save_json
+from benchmarks.common import (bench_path, emit, history_append, run_worker,
+                               save_json)
 from benchmarks.scaling_common import worker_code
-
-BENCH_JSON = os.path.join(REPO, "BENCH_scaling.json")
 
 
 def run(sizes=(4, 8, 12), iters=5, chunk=4, n_res=200, smoke=False):
@@ -44,6 +42,7 @@ def run(sizes=(4, 8, 12), iters=5, chunk=4, n_res=200, smoke=False):
                          round(out["collective_permute_bytes"], 1), "B"))
     save_json("fig6_comp_comm.json", raw)
     _write_bench(raw, sizes, smoke)
+    history_append("fig6", rows, smoke=smoke)
     return rows
 
 
@@ -76,7 +75,7 @@ def _write_bench(raw, sizes, smoke: bool) -> None:
             for r in raw
         ],
     }
-    out = BENCH_JSON.replace(".json", "_smoke.json") if smoke else BENCH_JSON
+    out = bench_path("scaling", smoke)
     with open(out, "w") as f:
         json.dump(bench, f, indent=1)
     print(f"[fig6] wrote {out}")

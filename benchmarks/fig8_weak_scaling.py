@@ -1,12 +1,15 @@
 """Paper Fig 8: weak scaling — fixed work per subdomain, growing subdomain count.
-Reports aggregate residual-points/sec and W_e = T_1/T_NP (eq. 8).
+Reports aggregate residual-points/sec and W_e = T_1/T_NP (eq. 8), with the
+comp-vs-comm attribution of every size from the PR-8 splitter (``comp_s`` /
+``comm_s`` / ``comm_frac``) so a scaling knee is immediately attributable to
+communication growth vs per-device compute drift.
 
 NOTE (single-core container): devices timeshare one core, so T_NP grows ~linearly
 with NP and W_e measures framework overhead, not hardware speedup; the dry-run
 roofline carries the hardware story.  A core-count-normalized efficiency
 (T_1 * NP / T_NP / NP == T_1/T_NP * 1) is also reported for reference.
 """
-from benchmarks.common import emit, run_worker, save_json
+from benchmarks.common import emit, history_append, run_worker, save_json
 from benchmarks.scaling_common import worker_code
 
 
@@ -24,8 +27,14 @@ def run(sizes=(1, 2, 4, 8), iters=5, n_res=2000):
             rows.append((f"fig8/{method}/n{n}/We_timeshared", round(t1 / t, 3), "ratio"))
             rows.append((f"fig8/{method}/n{n}/We_core_normalized",
                          round(t1 * n / t, 3), "ratio"))
+            # comp/comm attribution: where the weak-scaling time goes
+            rows.append((f"fig8/{method}/n{n}/comp_points_per_s",
+                         round(n_res * n / out["comp_s"], 1), "pts/s"))
+            rows.append((f"fig8/{method}/n{n}/comm_frac",
+                         round(out["comm_frac"], 4), "ratio"))
             raw.append({"method": method, "n": n, **out})
     save_json("fig8_weak.json", raw)
+    history_append("fig8", rows)
     return rows
 
 

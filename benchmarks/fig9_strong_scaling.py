@@ -1,7 +1,10 @@
 """Paper Fig 9: strong scaling — FIXED global problem size, growing workers.
 Speedup = T_1/T_NP, efficiency = T_1/(NP * T_NP) (eq. 9); core-normalized variant
-included for the single-core container (see fig8 note)."""
-from benchmarks.common import emit, run_worker, save_json
+included for the single-core container (see fig8 note).  Each size also reports
+the PR-8 comp/comm split (``comp_s`` speedup and ``comm_frac``): strong-scaling
+efficiency loss decomposes into communication growth vs shrinking per-device
+batches."""
+from benchmarks.common import emit, history_append, run_worker, save_json
 from benchmarks.scaling_common import worker_code
 
 TOTAL_RES = 8192
@@ -11,17 +14,25 @@ def run(sizes=(1, 2, 4, 8), iters=5):
     rows, raw = [], []
     for method in ("cpinn", "xpinn"):
         t1 = None
+        c1 = None
         for n in sizes:
             out = run_worker(worker_code(n, 1, method, n_res=TOTAL_RES // n,
                                          n_iface=20, iters=iters), n_devices=max(n, 1))
             t = out["total_s"]
             t1 = t if t1 is None else t1
+            c1 = out["comp_s"] if c1 is None else c1
             rows.append((f"fig9/{method}/n{n}/speedup_core_normalized",
                          round(t1 / t * n, 3), "x"))
             rows.append((f"fig9/{method}/n{n}/efficiency_core_normalized",
                          round(t1 / t, 3), "ratio"))
+            # comp-only speedup isolates the communication term from the ratio
+            rows.append((f"fig9/{method}/n{n}/comp_speedup_core_normalized",
+                         round(c1 / out["comp_s"] * n, 3), "x"))
+            rows.append((f"fig9/{method}/n{n}/comm_frac",
+                         round(out["comm_frac"], 4), "ratio"))
             raw.append({"method": method, "n": n, **out})
     save_json("fig9_strong.json", raw)
+    history_append("fig9", rows)
     return rows
 
 

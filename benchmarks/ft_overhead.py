@@ -38,10 +38,9 @@ from repro.data import make_batch
 from repro.kernels import ops
 from repro.runtime import Fault, FaultInjector, Supervisor, SupervisorConfig
 
-from benchmarks.common import REPO, emit
+from benchmarks.common import bench_path, emit, history_append
 from benchmarks.fig4_cost_profile import _interleaved, _med, _paired_ratio
 
-BENCH_FT_JSON = os.path.join(REPO, "BENCH_ft.json")
 
 
 def _workload(n_res=1000, width=24, depth=4, n_iface=20):
@@ -166,7 +165,7 @@ def run(iters: int = 10, smoke: bool = False):
 
     accounting = _dispatch_accounting()
 
-    out = BENCH_FT_JSON.replace(".json", "_smoke.json") if smoke else BENCH_FT_JSON
+    out = bench_path("ft", smoke)
     with open(out, "w") as f:
         json.dump({
             "workload": f"quickstart 2x2 Burgers XPINN, n_res={n_res}, "
@@ -188,6 +187,7 @@ def run(iters: int = 10, smoke: bool = False):
             "dispatch_accounting": accounting,
         }, f, indent=1)
     print(f"wrote {out}")
+    history_append("ft", rows, smoke=smoke)
     return rows
 
 
@@ -222,7 +222,7 @@ def recovery_smoke_rows(chunk: int = 20, n_chunks: int = 4):
         raise AssertionError(
             f"NaN recovery failed: trips={rep_n.guard_trips} "
             f"step={int(s_nan.step)} finite={finite}")
-    return [
+    rows = [
         ("ft/smoke/crash_recovery_bitwise_diff", diff, ""),
         ("ft/smoke/crash_rollback_ms",
          round(rep_c.recovery_s[0] * 1e3, 2), "ms"),
@@ -230,6 +230,8 @@ def recovery_smoke_rows(chunk: int = 20, n_chunks: int = 4):
         ("ft/smoke/nan_rollback_ms",
          round(rep_n.recovery_s[0] * 1e3, 2), "ms"),
     ]
+    history_append("ft", rows, smoke=True)
+    return rows
 
 
 def main():

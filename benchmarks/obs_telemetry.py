@@ -95,6 +95,80 @@ def overhead_rows(iters: int = 10, smoke: bool = False):
     return rows, detail
 
 
+def trace_overhead_rows(iters: int = 10, smoke: bool = False):
+    """Causal-tracer overhead, paired round-robin: (a) the guarded training
+    chunk with the trainer's dispatch span on vs off (same jitted program —
+    only the host-side span wrapper differs) and (b) the serve hot path
+    (frontend submit -> microbatch -> engine -> result) with a tracer-carrying
+    Obs vs a bare frontend.  Enforces the <= 2% acceptance bound in full mode
+    (smoke reports only; sub-ms smoke dispatches are too noisy to gate)."""
+    from repro.obs import MetricsRegistry, Obs, Tracer
+    from repro.serve.engine import FieldEngine
+    from repro.serve.export import FieldBundle
+    from repro.serve.frontend import ServeFrontend
+
+    n_res, chunk = (250, 20) if smoke else (1000, 100)
+    _, dec, cfg, b, tr = _workload(n_res=n_res)
+    tracer = Tracer()
+
+    def chunk_run(traced):
+        tr.tracer = tracer if traced else None
+        out = tr.run_chunk_guarded(tr.init(0), b, chunk)
+        tr.tracer = None
+        return out
+
+    t = _interleaved({"plain": lambda _: chunk_run(False),
+                      "traced": lambda _: chunk_run(True)}, None, iters)
+    chunk_ratio = _paired_ratio(t["traced"], t["plain"])
+    chunk_pct = (chunk_ratio - 1.0) * 100.0
+
+    # serve path: one bundle, two frontends — bare vs tracer-carrying Obs;
+    # caches disabled so every round pays the full admission->dispatch path
+    state = tr.init(0)
+    bundle = FieldBundle(model_cfg=cfg, params=state.params, decomp=dec,
+                         act_codes=np.zeros((4,), np.int32), pde=None)
+    rng = np.random.default_rng(0)
+    cloud = rng.uniform((-1, 0), (1, 1), size=(500, 2))
+
+    def mk_frontend(traced):
+        obs = (Obs(registry=MetricsRegistry(), events=None, tracer=tracer)
+               if traced else None)
+        eng = FieldEngine(bundle, tol=0.0, obs=obs)
+        return ServeFrontend(eng, order=1, cache_size=0, obs=obs)
+
+    fes = {False: mk_frontend(False), True: mk_frontend(True)}
+    for fe in fes.values():
+        fe.result(fe.submit(cloud))           # warm the compile cache
+
+    def serve_run(traced):
+        fe = fes[traced]
+        return fe.result(fe.submit(cloud))
+
+    t2 = _interleaved({"plain": lambda _: serve_run(False),
+                       "traced": lambda _: serve_run(True)}, None,
+                      max(iters, 5))
+    serve_ratio = _paired_ratio(t2["traced"], t2["plain"])
+    serve_pct = (serve_ratio - 1.0) * 100.0
+
+    rows = [
+        ("obs/trace/chunk_overhead", round(chunk_pct, 2), "%"),
+        ("obs/trace/serve_overhead", round(serve_pct, 2), "%"),
+        ("obs/trace/spans_recorded", tracer.stats()["spans_recorded"], ""),
+    ]
+    if not smoke:
+        for name, pct in (("chunk", chunk_pct), ("serve", serve_pct)):
+            if not pct <= OVERHEAD_BOUND_PCT:
+                raise AssertionError(
+                    f"tracer {name} overhead {pct:.2f}% exceeds the "
+                    f"{OVERHEAD_BOUND_PCT}% acceptance bound")
+    detail = {"chunk_paired_ratio": round(chunk_ratio, 4),
+              "chunk_overhead_pct": round(chunk_pct, 2),
+              "serve_paired_ratio": round(serve_ratio, 4),
+              "serve_overhead_pct": round(serve_pct, 2),
+              "acceptance_bound_pct": OVERHEAD_BOUND_PCT}
+    return rows, detail
+
+
 # ------------------------------------------------------------------ flatness
 
 def retrace_rows():
@@ -206,6 +280,7 @@ def smoke_rows():
     """CI-fast acceptance for ``run.py --smoke``: overhead measurement (report
     only), flat-line retrace assertions, schema-validated JSONL."""
     rows, _detail = overhead_rows(iters=3, smoke=True)
+    rows += trace_overhead_rows(iters=3, smoke=True)[0]
     rows += retrace_rows()
     rows += jsonl_rows()
     return rows
@@ -213,11 +288,14 @@ def smoke_rows():
 
 def run(iters: int = 10, smoke: bool = False):
     rows, detail = overhead_rows(iters=iters, smoke=smoke)
+    t_rows, t_detail = trace_overhead_rows(iters=iters, smoke=smoke)
+    rows += t_rows
     rows += retrace_rows()
     rows += jsonl_rows()
     save_json("obs_telemetry.json", {
         "backend": jax.default_backend(), "iters": iters,
         "telemetry_overhead": detail,
+        "trace_overhead": t_detail,
         "retrace": "all flat (asserted zero backend compiles)",
     })
     return rows

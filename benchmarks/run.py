@@ -17,6 +17,7 @@ import argparse
 import sys
 import traceback
 
+from benchmarks import common
 from benchmarks.common import emit
 
 
@@ -24,20 +25,25 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig6,fig8,fig9,table2,fig13,serve,"
-                         "slo,ft,obs,roofline")
+                         "slo,ft,obs,trace,roofline")
     ap.add_argument("--quick", action="store_true", help="fewer sizes/iters")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-fast subset: tiny fig4 jvp-vs-pallas + "
                          "run_chunk e2e + supervisor crash/NaN recovery + "
-                         "serve-SLO clean/faulted acceptance + roofline")
+                         "serve-SLO clean/faulted acceptance + validated "
+                         "trace exports + perf-regression gate + roofline")
     args = ap.parse_args()
 
     from benchmarks import (fig4_cost_profile, fig6_comp_comm, fig8_weak_scaling,
                             fig9_strong_scaling, fig13_inverse, ft_overhead,
                             obs_telemetry, roofline, serve_slo,
-                            serve_throughput, table2_spacetime)
+                            serve_throughput, table2_spacetime,
+                            trace_observatory)
 
     if args.smoke:
+        # history appends buffer until the gate below: a regressing run is
+        # flagged BEFORE it can enter its own baseline
+        common.defer_history()
         # the pallas fig4 pass exercises BOTH custom-VJP backwards (fused
         # hand-derived vs checkpointed-ref) and reports the fwd/bwd split
         rows = fig4_cost_profile.run(iters=3, path="pallas", smoke=True)
@@ -52,11 +58,23 @@ def main() -> None:
         # FAILS if any ticket is lost / the queue wedges / goodput under
         # faults drops below the floor
         rows += serve_slo.slo_smoke_rows()
-        # observability acceptance: telemetry-row overhead report, flat-line
-        # retrace assertions, schema-validated obs JSONL (malformed FAILS)
+        # observability acceptance: telemetry + tracer overhead reports,
+        # flat-line retrace assertions, schema-validated obs JSONL
         rows += obs_telemetry.smoke_rows()
+        # causal-trace acceptance: serve + supervised-training runs must
+        # export structurally VALID Chrome traces (matched B/E pairs,
+        # per-subdomain lanes, halo flows) with one trace_id per ticket
+        rows += trace_observatory.smoke_rows()
         rows += roofline.residual_rows("both")
         emit(rows)
+        # perf-trajectory gate: fresh headline rows vs trailing same-mode
+        # history (drift-adjusted paired ratios); raises PerfRegressionError
+        # on a trip and only records the run when it passes
+        for rep in common.flush_history_gate():
+            print(f"[gate] {rep['bench']}/{rep['mode']}: "
+                  f"{rep['gated']}/{rep['checked']} metrics gated, "
+                  f"drift x{rep['drift']}, recorded={rep['recorded']}",
+                  file=sys.stderr)
         return
 
     quick = args.quick
@@ -75,6 +93,7 @@ def main() -> None:
         "ft": lambda: ft_overhead.run(iters=3 if quick else 10),
         "obs": lambda: obs_telemetry.run(iters=3 if quick else 10,
                                          smoke=quick),
+        "trace": lambda: trace_observatory.run(smoke=quick),
         "roofline": roofline.run,
     }
     only = args.only.split(",") if args.only else list(suite)

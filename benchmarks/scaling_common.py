@@ -5,8 +5,8 @@ inside the scan body) on a fake-device host mesh and reports:
 
 * the comp-vs-comm walltime split (:func:`repro.obs.comp_comm_split` —
   interleaved paired rounds of the full chunk vs the exchange-ablated chunk,
-  per-step seconds), keeping the old ``total_s`` key so fig8/fig9/table2
-  consume the fused measurements unchanged;
+  per-step seconds): fig8/fig9/table2 consume the splitter keys
+  (``total_s`` / ``comp_s`` / ``comm_s`` / ``comm_frac``) directly;
 * the analytic halo traffic of the compiled chunk program
   (:func:`repro.obs.halo_traffic` — collective-permute ops/bytes per device,
   with the ``dd-comm-halo`` named-scope attribution);
@@ -60,7 +60,6 @@ with CompileWatcher() as w:
                             steps=chunk)
 out["compile"] = {{"backend_compiles": w.backend_compiles, "traces": w.traces}}
 out.update(split)
-out["comp_only_s"] = out["comp_s"]      # legacy key
 print("RESULT:" + json.dumps(out))
 """
 

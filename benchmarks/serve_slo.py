@@ -50,9 +50,7 @@ from repro.runtime import Fault, FaultInjector, FaultyEngine
 from repro.serve import (FieldBundle, FieldEngine, ResilienceConfig,
                          ResilientFrontend)
 
-from benchmarks.common import REPO, emit
-
-BENCH_JSON = os.path.join(REPO, "BENCH_slo.json")
+from benchmarks.common import bench_path, emit, history_append
 TABLE3_ACTS = ["tanh", "sin", "cos", "tanh", "sin", "cos", "tanh", "sin",
                "cos", "tanh"]
 
@@ -265,7 +263,7 @@ def run(smoke: bool = False, seed: int = 0):
             rows.append((f"slo/rho{rho}/{tag}/degraded_frac",
                          rec["degraded_frac"], ""))
 
-    out = BENCH_JSON.replace(".json", "_smoke.json") if smoke else BENCH_JSON
+    out = bench_path("slo", smoke)
     with open(out, "w") as f:
         json.dump({
             "workload": "us_map 10-region inverse-heat bundle (2 nets/region "
@@ -282,6 +280,7 @@ def run(smoke: bool = False, seed: int = 0):
             "records": records,
         }, f, indent=1)
     print(f"[serve_slo] wrote {out}", file=sys.stderr)
+    history_append("slo", rows, smoke=smoke)
     return rows
 
 
@@ -309,14 +308,17 @@ def slo_smoke_rows(goodput_floor: float = 0.55,
         raise AssertionError(
             f"slo smoke: faulted goodput {faulted['goodput']} < "
             f"{goodput_floor} — resilience layer is not holding the SLO")
-    return [
+    rows = [
         ("slo/smoke/clean_goodput", clean["goodput"], ""),
         ("slo/smoke/faulted_goodput", faulted["goodput"], ""),
+        ("slo/smoke/clean_p99_ms", clean["p99_ms"], "ms"),
         ("slo/smoke/faulted_p99_ms", faulted["p99_ms"], "ms"),
         ("slo/smoke/faulted_shed_rate", faulted["shed_rate"], ""),
         ("slo/smoke/faulted_degraded_frac", faulted["degraded_frac"], ""),
         ("slo/smoke/guard_trips", faulted["guard_trips"], ""),
     ]
+    history_append("slo", rows, smoke=True)
+    return rows
 
 
 if __name__ == "__main__":

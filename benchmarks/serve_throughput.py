@@ -45,9 +45,7 @@ from repro.core.nets import MLPConfig, SubdomainModelConfig, stacked_init
 from repro.core.pdes import HeatConduction2D
 from repro.serve import FieldBundle, FieldEngine, ServeFrontend
 
-from benchmarks.common import REPO, emit
-
-BENCH_JSON = os.path.join(REPO, "BENCH_serve.json")
+from benchmarks.common import bench_path, emit, history_append
 TABLE3_ACTS = ["tanh", "sin", "cos", "tanh", "sin", "cos", "tanh", "sin",
                "cos", "tanh"]
 
@@ -135,7 +133,7 @@ def run(iters: int = 5, smoke: bool = False):
                      rec["first_order_speedup"], "x"))
         rows.append((f"serve/b{n}/cached", rec["cached_pts_per_s"], "pts/s"))
         rows.append((f"serve/b{n}/cached_speedup", rec["cached_speedup"], "x"))
-    out = BENCH_JSON.replace(".json", "_smoke.json") if smoke else BENCH_JSON
+    out = bench_path("serve", smoke)
     with open(out, "w") as f:
         json.dump({"workload": "us_map 10-region inverse-heat bundle "
                                "(2 nets/region, Table-3 acts)",
@@ -143,6 +141,7 @@ def run(iters: int = 5, smoke: bool = False):
                                "(per-round ratios)",
                    "records": records}, f, indent=1)
     print(f"[serve_throughput] wrote {out}", file=sys.stderr)
+    history_append("serve", rows, smoke=smoke)
     return rows
 
 

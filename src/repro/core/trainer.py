@@ -111,6 +111,28 @@ def _nan_like(shapes):
     return jax.tree.map(lambda s: jnp.full(s.shape, jnp.nan, s.dtype), shapes)
 
 
+def _traced_dispatch(trainer, name: str, steps, call):
+    """Host-side chunk span around a public ``run_chunk*`` dispatch.
+
+    ``trainer.tracer is None`` (the default) takes ``call()`` verbatim — no
+    span object, no clock read, no blocking, and the jitted program is the
+    same object either way (trace-count/HLO parity asserted in
+    tests/test_tracing.py).  With a tracer attached, the span brackets the
+    dispatch and ``block_until_ready`` pins its end to the device actually
+    finishing (chunk granularity only: ONE block per chunk, so the <= 2%
+    overhead bound of benchmarks/obs_telemetry.py holds).  The span parents
+    to the caller's active span (the supervisor's chunk root) via the
+    tracer's stack."""
+    tr = getattr(trainer, "tracer", None)
+    if tr is None:
+        return call()
+    with tr.span(name, lane="train", steps=steps,
+                 trainer=type(trainer).__name__):
+        out = call()
+        jax.block_until_ready(out)
+    return out
+
+
 # ------------------------------------------------------- in-graph telemetry
 
 def _telemetry_terms(terms: dict, params, grads, lr, stacked: bool) -> dict:
@@ -155,6 +177,9 @@ class _DDCommon:
         self.pde, self.model_cfg, self.topo, self.cfg = pde, model_cfg, topo, cfg
         n = topo.n_sub
         self._act_codes_in = act_codes
+        # optional repro.obs.Tracer: host-side chunk spans around the public
+        # run_chunk* dispatches (the supervisor wires its obs tracer in here)
+        self.tracer = None
         # fused-kernel residual dispatch: requires (a) a single activation
         # shared by all subdomains (the kernel is specialized statically) and
         # (b) a PDE exposing the batched derivative-bundle methods.  An
@@ -305,8 +330,10 @@ class ReferenceTrainer(_DDCommon):
         over the chunk axis, shape (steps, n_sub).
         """
         if steps is None:
-            return self._chunk_stacked(state, batch)
-        return self._chunk_const(state, batch, steps)
+            return _traced_dispatch(self, "train.run_chunk", None,
+                                    lambda: self._chunk_stacked(state, batch))
+        return _traced_dispatch(self, "train.run_chunk", steps,
+                                lambda: self._chunk_const(state, batch, steps))
 
     # ------------------------------------------------------------ guarded chunk
     def _guarded_body(self, carry, batch: SubBatch, lrs):
@@ -354,7 +381,10 @@ class ReferenceTrainer(_DDCommon):
         recompiling (recovery backoff)."""
         if lr_scale is None:
             lr_scale = jnp.ones_like(self.lrs)
-        return self._chunk_guarded(state, batch, steps, jnp.asarray(lr_scale))
+        return _traced_dispatch(
+            self, "train.run_chunk_guarded", steps,
+            lambda: self._chunk_guarded(state, batch, steps,
+                                        jnp.asarray(lr_scale)))
 
 
 class DistributedDDTrainer(_DDCommon):
@@ -483,7 +513,8 @@ class DistributedDDTrainer(_DDCommon):
         fn = self._chunk_cache.get(steps)
         if fn is None:
             fn = self._chunk_cache[steps] = self._build_chunk(steps)
-        return fn(state, batch)
+        return _traced_dispatch(self, "train.run_chunk", steps,
+                                lambda: fn(state, batch))
 
     # ------------------------------------------------------------ guarded chunk
     def _build_guarded_chunk(self, steps: int):
@@ -554,7 +585,9 @@ class DistributedDDTrainer(_DDCommon):
         fn = self._chunk_cache.get(("guarded", steps))
         if fn is None:
             fn = self._chunk_cache[("guarded", steps)] = self._build_guarded_chunk(steps)
-        return fn(state, batch, jnp.asarray(lr_scale))
+        return _traced_dispatch(
+            self, "train.run_chunk_guarded", steps,
+            lambda: fn(state, batch, jnp.asarray(lr_scale)))
 
     def shard_batch(self, batch: SubBatch) -> SubBatch:
         sh = NamedSharding(self.mesh, P("sub"))
@@ -616,6 +649,7 @@ class DataParallelTrainer:
         self.mesh = mesh
         self.step = self._build_step()
         self._chunk_cache: dict[int, Any] = {}
+        self.tracer = None   # optional repro.obs.Tracer (host chunk spans)
 
     def init(self, seed: int = 0):
         params = nets.init_model(self.model_cfg, jax.random.PRNGKey(seed))
@@ -728,7 +762,8 @@ class DataParallelTrainer:
         fn = self._chunk_cache.get(steps)
         if fn is None:
             fn = self._chunk_cache[steps] = self._build_chunk(steps)
-        return fn(state, batch)
+        return _traced_dispatch(self, "train.run_chunk", steps,
+                                lambda: fn(state, batch))
 
     # ------------------------------------------------------------ guarded chunk
     def _build_guarded_chunk(self, steps: int):
@@ -795,7 +830,9 @@ class DataParallelTrainer:
         fn = self._chunk_cache.get(("guarded", steps))
         if fn is None:
             fn = self._chunk_cache[("guarded", steps)] = self._build_guarded_chunk(steps)
-        return fn(state, batch, jnp.asarray(lr_scale, jnp.float32))
+        return _traced_dispatch(
+            self, "train.run_chunk_guarded", steps,
+            lambda: fn(state, batch, jnp.asarray(lr_scale, jnp.float32)))
 
 
 # ------------------------------------------------------------------ checkpointing

@@ -110,18 +110,22 @@ def _latency_summary(frontend) -> dict:
 def run_server(frontend, sample_cloud, *, rate: float, duration: float,
                deadline: float | None = None, heartbeat: float = 1.0,
                status_file: str | None = None, seed: int = 0,
-               max_requests: int | None = None,
+               max_requests: int | None = None, trace_path: str | None = None,
                clock=time.monotonic, sleep=time.sleep) -> dict:
     """The serving loop: Poisson admission -> poll/flush -> heartbeat ->
     drain.  Returns the final report dict (also printed as JSON).
 
     Heartbeats and the status file carry the frontend health snapshot plus a
-    ``latency`` block (p50/p99/count per stage: queue wait, dispatch, e2e).
-    When the frontend carries an event sink (``ResilientFrontend(obs=...)``
-    with a JSONL path), each heartbeat and the final report are also emitted
-    as schema-validated events."""
+    ``latency`` block (p50/p99/count per stage: queue wait, dispatch, e2e)
+    and — when the frontend's obs carries a tracer — a ``trace`` block
+    (sampling counts, span buffer watermark).  When the frontend carries an
+    event sink (``ResilientFrontend(obs=...)`` with a JSONL path), each
+    heartbeat and the final report are also emitted as schema-validated
+    events.  ``trace_path`` exports the span buffer as Chrome-trace JSON at
+    shutdown (open it at https://ui.perfetto.dev)."""
     rng = np.random.default_rng(seed + 1)
     stop = {"sig": None}
+    tracer = getattr(getattr(frontend, "obs", None), "tracer", None)
 
     def _on_signal(signum, _frame):
         stop["sig"] = signum
@@ -145,6 +149,8 @@ def run_server(frontend, sample_cloud, *, rate: float, duration: float,
             if now >= next_beat:
                 h = {**frontend.health(),
                      "latency": _latency_summary(frontend)}
+                if tracer is not None:
+                    h["trace"] = tracer.stats()
                 print(json.dumps({"t": round(now - t0, 3), **h}),
                       file=sys.stderr, flush=True)
                 if status_file:
@@ -181,9 +187,19 @@ def run_server(frontend, sample_cloud, *, rate: float, duration: float,
                   if k != "frontend"},
         "signal": stop["sig"],
     }
+    if tracer is not None:
+        report["trace"] = tracer.stats()
+        if trace_path:
+            from repro.obs import export_chrome_trace
+            report["trace"]["export"] = export_chrome_trace(
+                trace_path, tracer.spans(),
+                process_name="serve_field")
+            report["trace"]["path"] = trace_path
     if status_file:
         _write_status(status_file, {**health, "final": True,
-                                    "latency": report["latency"]})
+                                    "latency": report["latency"],
+                                    **({"trace": tracer.stats()}
+                                       if tracer is not None else {})})
     obs = getattr(frontend, "obs", None)
     if obs is not None:
         obs.emit("serve_report", requests=len(tickets),
@@ -223,30 +239,38 @@ def main(argv=None) -> int:
     ap.add_argument("--obs-jsonl", default=None,
                     help="stream schema-validated obs events (manifest, "
                          "heartbeats, serve_report, metrics) to this JSONL")
+    ap.add_argument("--trace", default=None,
+                    help="export the span buffer as Chrome-trace JSON here "
+                         "at shutdown (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="fraction of traces recorded (ids propagate on all)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable span tracing entirely")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    from repro.obs import make_obs
     from repro.serve import FieldEngine, ResilienceConfig, ResilientFrontend
     from repro.serve.export import load_bundle
 
     bundle = (load_bundle(args.bundle) if args.bundle
               else _demo_bundle(args.demo, args.seed))
-    engine = FieldEngine(bundle)
-    if args.faults:
-        from repro.runtime import FaultInjector, FaultyEngine, parse_faults
-        engine = FaultyEngine(engine, FaultInjector(parse_faults(args.faults)))
     cfg = ResilienceConfig(order=args.order if bundle.pde is not None else 1,
                            max_queue_requests=args.queue_requests,
                            max_queue_points=args.queue_points,
                            max_queue_age=args.queue_age,
                            default_deadline=args.deadline)
-    obs = None
-    if args.obs_jsonl:
-        from repro.obs import make_obs
-        obs = make_obs(args.obs_jsonl, clock=time.monotonic,
-                       run_id=f"serve-{args.seed}",
-                       config={"rate": args.rate, "duration": args.duration,
-                               "order": cfg.order, "faults": args.faults})
+    obs = make_obs(args.obs_jsonl or None, clock=time.monotonic,
+                   run_id=f"serve-{args.seed}",
+                   config={"rate": args.rate, "duration": args.duration,
+                           "order": cfg.order, "faults": args.faults},
+                   trace=not args.no_trace, trace_sample=args.trace_sample)
+    # the engine shares the obs so its serve.engine/* metrics land in the
+    # same registry and its span nests under the frontend's microbatch span
+    engine = FieldEngine(bundle, obs=obs)
+    if args.faults:
+        from repro.runtime import FaultInjector, FaultyEngine, parse_faults
+        engine = FaultyEngine(engine, FaultInjector(parse_faults(args.faults)))
     fe = ResilientFrontend(engine, cfg, seed=args.seed, obs=obs)
     sampler = _cloud_sampler(bundle.decomp, args.seed)
     fe.query(sampler())   # compile warmup outside the measured traffic
@@ -255,10 +279,10 @@ def main(argv=None) -> int:
                             duration=args.duration, deadline=args.deadline,
                             heartbeat=args.heartbeat,
                             status_file=args.status_file, seed=args.seed,
-                            max_requests=args.max_requests)
+                            max_requests=args.max_requests,
+                            trace_path=args.trace)
     finally:
-        if obs is not None:
-            obs.close()
+        obs.close()
     return 0 if report["drained"]["unanswered"] == 0 else 1
 
 

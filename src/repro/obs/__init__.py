@@ -15,8 +15,13 @@ Entry points:
 * :class:`CompileWatcher` / :func:`comp_comm_split` / :func:`scope` —
   compile/retrace counting, walltime comp-vs-comm splitting, and the
   named-scope annotation vocabulary;
+* :class:`Tracer` / :class:`Span` — span-based causal tracing with
+  trace_id propagation (see EXPERIMENTS.md §Tracing), exported to
+  Chrome-trace/Perfetto timelines via :mod:`repro.obs.trace_export`;
+* :mod:`repro.obs.trajectory` — append-only bench history + the
+  drift-robust perf regression gate;
 * :class:`Obs` — the bundle the subsystems actually accept: a registry plus
-  an optional event log sharing its clock.
+  an optional event log and an optional tracer sharing its clock.
 """
 from __future__ import annotations
 
@@ -24,24 +29,32 @@ import time
 from dataclasses import dataclass
 
 from repro.obs.events import (EVENT_KINDS, EventLog, ObsSchemaError,
-                              SCHEMA_VERSION, read_events, validate_events)
+                              SCHEMA_VERSION, check_fields, read_events,
+                              validate_events)
 from repro.obs.profiling import (CompileWatcher, SCOPES, comp_comm_split,
                                  compile_counts, halo_traffic, scope)
 from repro.obs.registry import (Counter, CounterGroup, Gauge, Histogram,
                                 MetricsRegistry)
+from repro.obs.trace_export import (ChromeTraceError, export_chrome_trace,
+                                    halo_flow_events, to_chrome,
+                                    training_timeline, validate_chrome_trace)
+from repro.obs.tracing import Span, Tracer
 
 
 @dataclass
 class Obs:
-    """Registry + optional event sink, one clock.
+    """Registry + optional event sink + optional tracer, one clock.
 
     Subsystems take ``obs: Obs | None``; ``None`` means "keep your own
-    private registry" (legacy behavior, zero overhead change).  Build with
-    :func:`make_obs` so the event log inherits the registry clock.
+    private registry" (legacy behavior, zero overhead change), and a None
+    ``tracer`` keeps tracing bitwise out of every code path.  Build with
+    :func:`make_obs` so the event log and tracer inherit the registry
+    clock.
     """
 
     registry: MetricsRegistry
     events: EventLog | None = None
+    tracer: Tracer | None = None
 
     @property
     def clock(self):
@@ -58,20 +71,27 @@ class Obs:
 
 
 def make_obs(jsonl_path: str | None = None, clock=time.perf_counter,
-             run_id: str | None = None, config: dict | None = None) -> Obs:
-    """One-call setup: registry (+ JSONL event log when a path is given),
-    sharing ``clock``."""
+             run_id: str | None = None, config: dict | None = None,
+             trace: bool = False, trace_sample: float = 1.0,
+             trace_capacity: int = 8192) -> Obs:
+    """One-call setup: registry (+ JSONL event log when a path is given,
+    + tracer when ``trace``), all sharing ``clock``."""
     reg = MetricsRegistry(clock=clock)
     ev = (EventLog(jsonl_path, clock=clock, run_id=run_id, config=config)
           if jsonl_path else None)
-    return Obs(registry=reg, events=ev)
+    tr = (Tracer(clock=clock, sample_rate=trace_sample,
+                 capacity=trace_capacity) if trace else None)
+    return Obs(registry=reg, events=ev, tracer=tr)
 
 
 __all__ = [
     "Counter", "CounterGroup", "Gauge", "Histogram", "MetricsRegistry",
-    "EventLog", "ObsSchemaError", "read_events", "validate_events",
-    "EVENT_KINDS", "SCHEMA_VERSION",
+    "EventLog", "ObsSchemaError", "check_fields", "read_events",
+    "validate_events", "EVENT_KINDS", "SCHEMA_VERSION",
     "CompileWatcher", "SCOPES", "comp_comm_split", "compile_counts",
     "halo_traffic", "scope",
+    "Span", "Tracer",
+    "ChromeTraceError", "export_chrome_trace", "halo_flow_events",
+    "to_chrome", "training_timeline", "validate_chrome_trace",
     "Obs", "make_obs",
 ]

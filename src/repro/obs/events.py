@@ -147,11 +147,18 @@ def validate_events(path_or_events) -> dict:
             t = ev.get("t")
             if not isinstance(t, _num) or isinstance(t, bool) or t < 0:
                 raise ObsSchemaError(f"{where} ({kind}): bad 't': {t!r}")
-        for fld, typ in EVENT_KINDS[kind].items():
-            v = ev.get(fld)
-            if v is None or isinstance(v, bool) and typ is not bool \
-                    or not isinstance(v, typ):
-                raise ObsSchemaError(
-                    f"{where} ({kind}): field {fld!r} missing or not "
-                    f"{typ}: {v!r}")
+        check_fields(ev, EVENT_KINDS[kind], f"{where} ({kind})")
     return events[0]
+
+
+def check_fields(obj: dict, spec: dict, where: str) -> None:
+    """Typed required-field check shared by :func:`validate_events` and the
+    bench-history validator (:mod:`repro.obs.trajectory`): every field in
+    ``spec`` must be present in ``obj`` with the required type (bools never
+    satisfy numeric specs); extra fields are always allowed."""
+    for fld, typ in spec.items():
+        v = obj.get(fld)
+        if v is None or isinstance(v, bool) and typ is not bool \
+                or not isinstance(v, typ):
+            raise ObsSchemaError(
+                f"{where}: field {fld!r} missing or not {typ}: {v!r}")

@@ -142,7 +142,7 @@ class CompileWatcher:
 
 def comp_comm_split(run_total, run_comp_only, iters: int = 5,
                     warmup: int = 1, steps: int = 1,
-                    clock=time.perf_counter) -> dict:
+                    clock=time.perf_counter, tracer=None) -> dict:
     """Wall-time comp-vs-comm split of a chunked training step.
 
     ``run_total`` runs one chunk WITH the halo exchange; ``run_comp_only``
@@ -156,18 +156,31 @@ def comp_comm_split(run_total, run_comp_only, iters: int = 5,
     container's CPU-quota drift hits both paths equally; ``comm`` is the
     median of PAIRED per-round differences, floored at 0 (a noisy round can
     go negative).  ``steps`` divides everything down to per-step seconds.
+
+    ``tracer`` (optional :class:`repro.obs.tracing.Tracer`): each timed round
+    lands as a ``train.ablation`` trace with ``train.total`` /
+    ``train.comp_only`` child spans, so the comp/comm split is visible on the
+    Perfetto timeline next to the chunk spans it explains.
     """
     for _ in range(max(warmup, 1)):
         run_total()
         run_comp_only()
     t_tot, t_comp = [], []
-    for _ in range(iters):
+    for i in range(iters):
+        root = (tracer.start_trace("train.ablation", lane="train", round=i)
+                if tracer is not None else None)
         t0 = clock()
         run_total()
-        t_tot.append(clock() - t0)
-        t0 = clock()
+        t1 = clock()
+        t_tot.append(t1 - t0)
+        t2 = clock()
         run_comp_only()
-        t_comp.append(clock() - t0)
+        t3 = clock()
+        t_comp.append(t3 - t2)
+        if root is not None:
+            tracer.record("train.total", t0, t1, parent=root, round=i)
+            tracer.record("train.comp_only", t2, t3, parent=root, round=i)
+            root.end()
     tot, comp = np.asarray(t_tot), np.asarray(t_comp)
     comm = float(np.median(tot - comp))
     return {

@@ -148,6 +148,13 @@ class Supervisor:
         self._restarts = 0
         self.obs = obs if obs is not None else Obs(registry=MetricsRegistry())
         self._clock, self._sleep = self.obs.clock, sleep
+        # thread the tracer down: each chunk attempt gets a root span, the
+        # trainer's dispatch span nests under it, and rollback/recovery land
+        # as retrospective children — one trace_id per attempt, surfaced on
+        # every JSONL event of that attempt
+        self.tracer = self.obs.tracer
+        if self.tracer is not None and getattr(trainer, "tracer", 1) is None:
+            trainer.tracer = self.tracer
         reg = self.obs.registry
         self._counters = reg.group(
             "train.supervisor",
@@ -225,77 +232,105 @@ class Supervisor:
             faults = self.injector.take(attempt)
             attempt += 1
             t0 = self._clock()
+            # one trace per chunk ATTEMPT: dispatch + fault/recovery hops
+            # share its trace_id, which also rides every event emitted below
+            span = (self.tracer.start_trace("train.chunk", lane="train",
+                                            chunk=attempt - 1, steps=n)
+                    if self.tracer is not None else None)
+            tid = {"trace_id": span.trace_id} if span is not None else {}
+            if span is not None:
+                span.__enter__()    # active: the trainer's span nests under
+            outcome = "committed"
             try:
-                for f in faults:
-                    if f.kind == "straggler":
-                        self._bump("stragglers")
-                        self.report.events.append(
-                            f"straggler +{f.delay:.2f}s at chunk {attempt - 1}")
-                        self.obs.emit("straggler", chunk=attempt - 1,
-                                      delay_s=float(f.delay))
-                        self._sleep(f.delay)
-                    elif f.kind in ("nan_params", "nan_grads"):
-                        self.report.events.append(
-                            f"{f.kind} injected at chunk {attempt - 1} "
-                            f"(subdomain {f.subdomain})")
-                        state = _from_tree(
-                            inject_nan(_as_tree(state), f.kind, f.subdomain),
-                            state)
-                state, terms, health = tr.run_chunk_guarded(
-                    state, batch, n, self._lr_scale_arg())
-                for f in faults:
-                    if f.kind == "crash":
-                        # mid-chunk preemption: the chunk computed but its
-                        # progress dies before the checkpoint
-                        raise InjectedFailure(
-                            f"injected crash at chunk {attempt - 1}")
-            except InjectedFailure as e:
-                self._bump("crashes")
-                self.report.events.append(str(e))
-                self.obs.emit("crash", chunk=attempt - 1)
-                t_r = self._clock()
-                state = self._rollback(state)
-                rec = self._clock() - t_r
-                self.report.recovery_s.append(rec)
-                self._h_rec.record(rec)
-                done = int(np.asarray(_as_tree(state)["step"]))
-                self.obs.emit("rollback", step=done, recovery_s=rec)
-                continue
-            if not bool(health["ok"]):
-                bad = np.flatnonzero(~np.atleast_1d(np.asarray(health["ok_sub"])))
-                self._bump("guard_trips")
-                self.report.events.append(
-                    f"guard trip at chunk {attempt - 1}: subdomains "
-                    f"{bad.tolist()} non-finite after "
-                    f"{int(health['good_steps'])} steps — rolling back with "
-                    f"lr backoff x{cfg.lr_backoff}")
-                self.obs.emit("guard_trip", chunk=attempt - 1,
-                              bad_subdomains=bad.tolist(),
-                              good_steps=int(health["good_steps"]))
-                self._apply_backoff(health)
-                t_r = self._clock()
-                state = self._rollback(state)
-                rec = self._clock() - t_r
-                self.report.recovery_s.append(rec)
-                self._h_rec.record(rec)
-                done = int(np.asarray(_as_tree(state)["step"]))
-                self.obs.emit("rollback", step=done, recovery_s=rec)
-                continue
-            # committed
-            done += n
-            committed += 1
-            self._bump("chunks")
-            wall = self._clock() - t0
-            self.report.walltimes.append(wall)
-            self._h_wall.record(wall)
-            if self.obs.events is not None:
-                # last committed step's mean loss (terms are concrete already)
-                last = np.asarray(terms["loss"])[-1]
-                self.obs.emit("chunk", step=done, steps=n,
-                              loss=float(np.nanmean(last)),
-                              walltime_s=float(wall))
-            if committed % cfg.ckpt_every_chunks == 0 or done >= total_steps:
-                self._save(state)
+                try:
+                    for f in faults:
+                        if f.kind == "straggler":
+                            self._bump("stragglers")
+                            self.report.events.append(
+                                f"straggler +{f.delay:.2f}s at chunk {attempt - 1}")
+                            self.obs.emit("straggler", chunk=attempt - 1,
+                                          delay_s=float(f.delay), **tid)
+                            if span is not None:
+                                span.event("train.straggler",
+                                           delay_s=float(f.delay))
+                            self._sleep(f.delay)
+                        elif f.kind in ("nan_params", "nan_grads"):
+                            self.report.events.append(
+                                f"{f.kind} injected at chunk {attempt - 1} "
+                                f"(subdomain {f.subdomain})")
+                            if span is not None:
+                                span.event("train.fault", kind=f.kind,
+                                           subdomain=f.subdomain)
+                            state = _from_tree(
+                                inject_nan(_as_tree(state), f.kind, f.subdomain),
+                                state)
+                    state, terms, health = tr.run_chunk_guarded(
+                        state, batch, n, self._lr_scale_arg())
+                    for f in faults:
+                        if f.kind == "crash":
+                            # mid-chunk preemption: the chunk computed but its
+                            # progress dies before the checkpoint
+                            raise InjectedFailure(
+                                f"injected crash at chunk {attempt - 1}")
+                except InjectedFailure as e:
+                    outcome = "crash"
+                    self._bump("crashes")
+                    self.report.events.append(str(e))
+                    self.obs.emit("crash", chunk=attempt - 1, **tid)
+                    t_r = self._clock()
+                    state = self._rollback(state)
+                    rec = self._clock() - t_r
+                    self.report.recovery_s.append(rec)
+                    self._h_rec.record(rec)
+                    if span is not None:
+                        self.tracer.record("train.rollback", t_r, t_r + rec,
+                                           parent=span, cause="crash")
+                    done = int(np.asarray(_as_tree(state)["step"]))
+                    self.obs.emit("rollback", step=done, recovery_s=rec, **tid)
+                    continue
+                if not bool(health["ok"]):
+                    outcome = "guard_trip"
+                    bad = np.flatnonzero(~np.atleast_1d(np.asarray(health["ok_sub"])))
+                    self._bump("guard_trips")
+                    self.report.events.append(
+                        f"guard trip at chunk {attempt - 1}: subdomains "
+                        f"{bad.tolist()} non-finite after "
+                        f"{int(health['good_steps'])} steps — rolling back with "
+                        f"lr backoff x{cfg.lr_backoff}")
+                    self.obs.emit("guard_trip", chunk=attempt - 1,
+                                  bad_subdomains=bad.tolist(),
+                                  good_steps=int(health["good_steps"]), **tid)
+                    self._apply_backoff(health)
+                    t_r = self._clock()
+                    state = self._rollback(state)
+                    rec = self._clock() - t_r
+                    self.report.recovery_s.append(rec)
+                    self._h_rec.record(rec)
+                    if span is not None:
+                        self.tracer.record("train.rollback", t_r, t_r + rec,
+                                           parent=span, cause="guard_trip")
+                    done = int(np.asarray(_as_tree(state)["step"]))
+                    self.obs.emit("rollback", step=done, recovery_s=rec, **tid)
+                    continue
+                # committed
+                done += n
+                committed += 1
+                self._bump("chunks")
+                wall = self._clock() - t0
+                self.report.walltimes.append(wall)
+                self._h_wall.record(wall)
+                if self.obs.events is not None:
+                    # last committed step's mean loss (terms concrete already)
+                    last = np.asarray(terms["loss"])[-1]
+                    self.obs.emit("chunk", step=done, steps=n,
+                                  loss=float(np.nanmean(last)),
+                                  walltime_s=float(wall), **tid)
+                if committed % cfg.ckpt_every_chunks == 0 or done >= total_steps:
+                    self._save(state)
+            finally:
+                if span is not None:
+                    span.annotate(outcome=outcome)
+                    span.__exit__(None, None, None)
         return state, self.report
 
     # ------------------------------------------------------------- rebalance

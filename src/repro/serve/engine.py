@@ -145,11 +145,21 @@ class FieldEngine:
         routed = self._route(pts)
         fn = self._get_fn(order)
         t0 = self.obs.clock() if self.obs is not None else None
-        outs = fn(*self._device_args(routed))
-        out = {}
-        claims = routed.claims
-        for k, v in outs.items():
-            out[k] = _stitch(routed, np.asarray(v), claims)  # blocks on device
+        # the engine's span parents to whatever span is active on the shared
+        # tracer — under the frontend's live microbatch span it lands at the
+        # bottom of the request's trace; standalone it is its own root
+        tracer = self.obs.tracer if self.obs is not None else None
+        sp = (tracer.span("serve.engine", lane="engine", order=order,
+                          points=len(pts)) if tracer is not None else None)
+        try:
+            outs = fn(*self._device_args(routed))
+            out = {}
+            claims = routed.claims
+            for k, v in outs.items():
+                out[k] = _stitch(routed, np.asarray(v), claims)  # blocks
+        finally:
+            if sp is not None:
+                sp.end()
         self.n_dispatches += 1
         self.last_claims = claims
         if self.obs is not None:

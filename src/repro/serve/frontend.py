@@ -27,7 +27,14 @@ frontend fixes both without threads or external deps:
   feed ``serve.frontend/{queue_wait_s,dispatch_s}`` histograms, and each
   ticket's stage times are stashed for the resilience layer's end-to-end
   breakdown.  Pass ``obs`` to share a registry (and its clock's event log)
-  across subsystems; omit it for a private registry (legacy behavior).
+  across subsystems; omit it for a private registry (legacy behavior);
+* **causal tracing** — when ``obs`` carries a :class:`~repro.obs.Tracer`,
+  each request gets a span tree: queue wait and dispatch land as
+  retrospective child spans under the request's span (either a root the
+  frontend opens itself, or the ``parent`` span :meth:`submit` was handed —
+  how the resilience layer threads ONE trace_id through every hop), and the
+  microbatch dispatch is a live span so the engine's own span nests under
+  it.  A ``tracer=None`` obs keeps every trace branch untaken.
 
 Admission control, deadlines, degraded modes, and retry policy live one layer
 up in :mod:`repro.serve.resilience`.
@@ -92,6 +99,10 @@ class ServeFrontend:
         # end-to-end latency breakdown
         self.stage_times: dict[int, dict] = {}
         self.last_stage: dict | None = None
+        self.tracer = obs.tracer if obs is not None else None
+        # ticket -> (request span, owned: bool, enqueue on the TRACER clock);
+        # owned=False means a layer above opened the span and will close it
+        self._req_spans: dict[int, tuple] = {}
 
     # ------------------------------------------------------------- caching
     def _cache_get(self, key: tuple) -> dict | None:
@@ -117,8 +128,13 @@ class ServeFrontend:
             self._cache_pts -= old[0][0]
 
     # ------------------------------------------------------------- requests
-    def submit(self, pts) -> int:
-        """Queue a request; returns a ticket for :meth:`result`."""
+    def submit(self, pts, parent=None) -> int:
+        """Queue a request; returns a ticket for :meth:`result`.
+
+        ``parent``: an open tracer span to hang this request's stage spans
+        under (the resilience layer passes its root so the whole lifecycle
+        shares one trace_id); without it, a tracer-on frontend opens its own
+        root per request."""
         from repro.serve.routing import _as_cloud
 
         pts = _as_cloud(pts, self.engine.bundle.decomp.dim)
@@ -126,12 +142,19 @@ class ServeFrontend:
         self._next_ticket += 1
         self.counters["requests"] += 1
         self.counters["points"] += len(pts)
+        tr = self.tracer
+        if tr is not None:
+            span = parent if parent is not None else tr.start_trace(
+                "serve.request", lane="serve", points=len(pts))
+            self._req_spans[ticket] = (span, parent is None, tr.clock())
         key = _signature(pts, self.order)
         cached = self._cache_get(key)
         if cached is not None:
             self.counters["cache_hits"] += 1
             self._results[ticket] = cached
             self.stage_times[ticket] = {"queue_wait_s": 0.0, "dispatch_s": 0.0}
+            if tr is not None:
+                span.event("serve.cache_hit")
         else:
             self.counters["cache_misses"] += 1
             self._pending.append((ticket, pts, key, self._clock()))
@@ -195,14 +218,35 @@ class ServeFrontend:
     def _eval_batch(self, batch: list, failures: list) -> None:
         """One microbatch dispatch; on failure, bisect to isolate the poison."""
         cloud = np.concatenate([pts for _, pts, _ in batch], axis=0)
+        tr, mb = self.tracer, None
+        if tr is not None:
+            # the microbatch span hangs off the first traced request in the
+            # batch (its "leader"); the engine's own span nests under it via
+            # the active-span stack, so at least one request's tree reaches
+            # engine depth — and a bisect-isolated retry batch of one always
+            # does
+            lead = next((self._req_spans[t][0] for _k, _p, toks in batch
+                         for t, _e in toks if t in self._req_spans), None)
+            mb = tr.span("serve.microbatch", parent=lead, clouds=len(batch),
+                         points=len(cloud))
         try:
             t0 = self._clock()
-            out = self.engine.evaluate(cloud, order=self.order)
+            if mb is not None:
+                with mb:
+                    out = self.engine.evaluate(cloud, order=self.order)
+            else:
+                out = self.engine.evaluate(cloud, order=self.order)
             dt = self._clock() - t0
             self.counters["eval_seconds"] += dt
         except Exception as exc:
             if len(batch) == 1:   # isolated: this cloud is the poison
                 self.counters["quarantined"] += 1
+                if tr is not None:
+                    for t, _enq in batch[0][2]:
+                        ent = self._req_spans.get(t)
+                        if ent is not None:
+                            ent[0].event("serve.quarantine",
+                                         error=type(exc).__name__)
                 failures.append(batch[0] + (exc,))
                 return
             mid = len(batch) // 2
@@ -231,6 +275,14 @@ class ServeFrontend:
                 wait = max(0.0, t0 - enq)
                 self._h_queue_wait.record(wait)
                 self.stage_times[t] = {"queue_wait_s": wait, "dispatch_s": dt}
+                if mb is not None:
+                    ent = self._req_spans.get(t)
+                    if ent is not None:
+                        span, _owned, enq_t = ent
+                        tr.record("serve.queue_wait", enq_t,
+                                  max(enq_t, mb.t0), parent=span)
+                        tr.record("serve.dispatch", mb.t0, mb.t1, parent=span,
+                                  clouds=len(batch))
 
     # ------------------------------------------------------------- results
     def ready(self, ticket: int) -> bool:
@@ -245,6 +297,9 @@ class ServeFrontend:
         for i, (t, pts, key, _enq) in enumerate(self._pending):
             if t == ticket:
                 del self._pending[i]
+                ent = self._req_spans.pop(t, None)
+                if ent is not None and ent[1]:
+                    ent[0].end(status="withdrawn")
                 return pts, key
         return None
 
@@ -263,6 +318,9 @@ class ServeFrontend:
                     f"ticket {ticket}: never issued or already retrieved "
                     f"(results are handed out once)")
         self.last_stage = self.stage_times.pop(ticket, None)
+        ent = self._req_spans.pop(ticket, None)
+        if ent is not None and ent[1]:
+            ent[0].end(status="served")
         return self._results.pop(ticket)
 
     def query(self, pts) -> dict:

@@ -30,6 +30,15 @@ The invariant the whole layer maintains: **every admitted ticket is answered
 exactly once** — served, degraded, shed, deadline-exceeded, or failed — and
 the queue can always make progress no matter what the engine does.
 
+When the shared ``obs`` carries a :class:`~repro.obs.Tracer`, every ticket
+ALSO gets exactly one trace: a root span opened at submit (even a request
+shed in O(1) gets — and closes — one), hop events for every retry /
+quarantine / ladder step-down / cache-only fallback, the inner frontend's
+queue-wait + dispatch + engine spans as children via the same trace_id, and
+the root closed with the final status in :meth:`_answer` — the one choke
+point every answer already passes through.  The trace_id surfaces on
+``ServeResult.trace_id`` so callers can join answers to timelines.
+
 Clock, sleep, and jitter RNG are injectable, so every behavior above is
 unit-testable without real waiting (and the SLO benchmark can run the whole
 stack on a virtual clock).
@@ -149,6 +158,8 @@ class ServeResult:
     queue_wait: float | None = None   # inner-queue wait (enqueue -> dispatch)
     dispatch: float | None = None     # engine evaluation seconds of the
                                       # microbatch that served this request
+    trace_id: str | None = None       # causal trace of this ticket's lifecycle
+                                      # (None when tracing is off)
 
     @property
     def ok(self) -> bool:
@@ -180,6 +191,7 @@ class _Queued:
     attempts: int = 0
     order: int = 2                     # tier this entry was dispatched at
     key: tuple = field(default=())     # order-free cloud identity
+    span: object = None                # open root span of this ticket's trace
 
 
 # ------------------------------------------------------------------ frontend
@@ -226,11 +238,18 @@ class ResilientFrontend:
         self._h_e2e = reg.histogram("serve.resilience/e2e_s")
 
     # ----------------------------------------------------------- answering
-    def _answer(self, q_or_ticket, res: ServeResult) -> None:
+    def _answer(self, q_or_ticket, res: ServeResult, span=None) -> None:
         if isinstance(q_or_ticket, _Queued):
             ticket, admitted = q_or_ticket.ticket, q_or_ticket.admitted
+            span = q_or_ticket.span if span is None else span
         else:
             ticket, admitted = q_or_ticket, self._clock()
+        if span is not None:
+            # every ticket's root closes HERE — shed and deadline-exceeded
+            # included — which is what makes "one trace per ticket, always
+            # closed" the same invariant as "every ticket answered once"
+            res.trace_id = span.trace_id
+            span.end(status=res.status, reason=res.reason)
         if res.latency is None:
             res.latency = max(0.0, self._clock() - admitted)
         self._h_e2e.record(res.latency)
@@ -260,29 +279,39 @@ class ResilientFrontend:
         ticket = self._next_ticket
         self._next_ticket += 1
         now = self._clock()
+        tr = self.obs.tracer
+        span = (tr.start_trace("serve.request", lane="serve", ticket=ticket,
+                               points=len(pts)) if tr is not None else None)
         if self.draining:
-            self._answer(ticket, ServeResult("shed", reason="draining"))
+            self._answer(ticket, ServeResult("shed", reason="draining"),
+                         span=span)
             return ticket
         cfg = self.cfg
         if (len(self._queue) >= cfg.max_queue_requests
                 or self._queued_points + len(pts) > cfg.max_queue_points):
-            self._answer(ticket, ServeResult("shed", reason="overload"))
+            self._answer(ticket, ServeResult("shed", reason="overload"),
+                         span=span)
             return ticket
         self.counters["admitted"] += 1
+        if span is not None:
+            span.event("serve.admitted")
         # admission-time cache probe: a full-order hit costs no queue slot
         sig = _signature(pts, cfg.order)
         hit = self._fe._cache_get(sig)
         if hit is not None:
             self._fe.counters["cache_hits"] += 1
+            if span is not None:
+                span.event("serve.cache_hit")
             self._answer(ticket, ServeResult("served", data=hit,
                                              order=cfg.order, reason="cache",
-                                             queue_wait=0.0, dispatch=0.0))
+                                             queue_wait=0.0, dispatch=0.0),
+                         span=span)
             return ticket
         dl = deadline if deadline is not None else cfg.default_deadline
         self._queue.append(_Queued(
             ticket=ticket, pts=pts, admitted=now,
             deadline=(now + dl) if dl is not None else None,
-            key=(sig[0], sig[2])))
+            key=(sig[0], sig[2]), span=span))
         self._queued_points += len(pts)
         self.poll()
         return ticket
@@ -346,6 +375,8 @@ class ResilientFrontend:
     def _cache_only(self, entries: list[_Queued], reason: str) -> None:
         """Bottom rung: answer cache hits (any tier), shed misses."""
         for q in entries:
+            if q.span is not None:
+                q.span.event("serve.cache_only", reason=reason)
             hit = order = None
             for o in (self.cfg.order, 1):
                 hit = self._fe._cache_get(_signature(q.pts, o))
@@ -382,7 +413,7 @@ class ResilientFrontend:
     def _dispatch(self, entries: list[_Queued], order: int) -> None:
         self._fe.order = order
         for q in entries:
-            q.inner = self._fe.submit(q.pts)
+            q.inner = self._fe.submit(q.pts, parent=q.span)
             q.order = order
             q.attempts = max(q.attempts, 1)
         alive = {q.inner: q for q in entries}
@@ -426,6 +457,10 @@ class ResilientFrontend:
                     self._cache_only(still, "breaker_open")
                     break
                 self.counters["retries"] += 1
+                for q in still:
+                    if q.span is not None:
+                        q.span.event("serve.retry", attempt=q.attempts,
+                                     order=order)
                 # jittered capped backoff before re-dispatching quarantine
                 self._sleep(self.cfg.retry_backoff *
                             (1.0 + float(self._rng.uniform(0.0, 1.0))))
@@ -439,7 +474,9 @@ class ResilientFrontend:
                     for q in still:
                         if self._fe.withdraw(q.inner) is not None:
                             del alive[q.inner]
-                            q.inner = self._fe.submit(q.pts)
+                            if q.span is not None:
+                                q.span.event("serve.degrade", to_order=order)
+                            q.inner = self._fe.submit(q.pts, parent=q.span)
                             q.order = order
                             alive[q.inner] = q
         for q in list(alive.values()):
