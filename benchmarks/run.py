@@ -25,20 +25,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig6,fig8,fig9,table2,fig13,serve,"
-                         "slo,ft,obs,trace,roofline")
+                         "slo,ft,chaos,obs,trace,roofline")
     ap.add_argument("--quick", action="store_true", help="fewer sizes/iters")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-fast subset: tiny fig4 jvp-vs-pallas + "
                          "run_chunk e2e + supervisor crash/NaN recovery + "
-                         "serve-SLO clean/faulted acceptance + validated "
-                         "trace exports + perf-regression gate + roofline")
+                         "serve-SLO clean/faulted acceptance + storage-chaos "
+                         "durability acceptance + validated trace exports + "
+                         "perf-regression gate + roofline")
     args = ap.parse_args()
 
-    from benchmarks import (fig4_cost_profile, fig6_comp_comm, fig8_weak_scaling,
-                            fig9_strong_scaling, fig13_inverse, ft_overhead,
-                            obs_telemetry, roofline, serve_slo,
-                            serve_throughput, table2_spacetime,
-                            trace_observatory)
+    from benchmarks import (chaos_soak, fig4_cost_profile, fig6_comp_comm,
+                            fig8_weak_scaling, fig9_strong_scaling,
+                            fig13_inverse, ft_overhead, obs_telemetry,
+                            roofline, serve_slo, serve_throughput,
+                            table2_spacetime, trace_observatory)
 
     if args.smoke:
         # history appends buffer until the gate below: a regressing run is
@@ -58,6 +59,12 @@ def main() -> None:
         # FAILS if any ticket is lost / the queue wedges / goodput under
         # faults drops below the floor
         rows += serve_slo.slo_smoke_rows()
+        # durability acceptance: seeded storage faults against checkpoint
+        # generations AND exported bundles through the full train -> crash ->
+        # restore -> export -> serve -> reload script; FAILS unless every
+        # fault is detected (100%) and every run recovers (generation
+        # fallback / refused-swap-then-repair)
+        rows += chaos_soak.chaos_smoke_rows()
         # observability acceptance: telemetry + tracer overhead reports,
         # flat-line retrace assertions, schema-validated obs JSONL
         rows += obs_telemetry.smoke_rows()
@@ -91,6 +98,8 @@ def main() -> None:
         "serve": lambda: serve_throughput.run(iters=3 if quick else 5),
         "slo": lambda: serve_slo.run(smoke=quick),
         "ft": lambda: ft_overhead.run(iters=3 if quick else 10),
+        "chaos": lambda: chaos_soak.run(iters=3 if quick else 8,
+                                        smoke=quick),
         "obs": lambda: obs_telemetry.run(iters=3 if quick else 10,
                                          smoke=quick),
         "trace": lambda: trace_observatory.run(smoke=quick),

@@ -84,7 +84,7 @@ def main():
     b = batch.device_arrays()
 
     if args.supervised:
-        from repro.runtime import (FaultInjector, Supervisor, SupervisorConfig,
+        from repro.runtime import (ChaosInjector, Supervisor, SupervisorConfig,
                                    elastic_resume, parse_faults)
 
         if args.resume:
@@ -99,7 +99,11 @@ def main():
             chunk_steps=chunk,
             ckpt_every_chunks=(max(1, args.save_every // chunk)
                                if args.save_every else 1))
-        injector = (FaultInjector(parse_faults(args.inject))
+        # ChaosInjector so storage faults (ckpt.bit_flip@2, ...) compose with
+        # the compute matrix in the same --inject spec; without any it behaves
+        # exactly like the plain FaultInjector
+        injector = (ChaosInjector(parse_faults(args.inject),
+                                  roots={"ckpt": args.ckpt})
                     if args.inject else None)
         sup = Supervisor(trainer, args.ckpt, cfg_sup, injector, decomp=decomp)
         state, report = sup.run(state, b, args.steps)
@@ -107,7 +111,7 @@ def main():
             print(f"[supervisor] {ev}")
         print(f"[supervisor] chunks={report.chunks} restarts={report.restarts}"
               f" crashes={report.crashes} guard_trips={report.guard_trips} "
-              f"stragglers={report.stragglers}")
+              f"stragglers={report.stragglers} corruptions={report.corruptions}")
         err = evaluate_l2(decomp, model_cfg, state.params, trainer.act_codes,
                           pde)
         print(f"[quickstart] final rel L2 error vs Cole-Hopf exact: {err:.4f}")

@@ -1,2 +1,7 @@
-from repro.checkpoint import ckpt
+from repro.checkpoint import ckpt, integrity
 from repro.checkpoint.ckpt import latest_step, raw_leaves, restore, save
+from repro.checkpoint.integrity import (CorruptCheckpointError, IntegrityError,
+                                        NoVerifiedCheckpointError, RestoreInfo,
+                                        latest_verified_step, quarantine,
+                                        verified_raw_leaves, verified_restore,
+                                        verify_step_dir)

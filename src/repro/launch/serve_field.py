@@ -21,6 +21,13 @@ the full production lifecycle:
 * **graceful draining** — SIGINT/SIGTERM (or the end of ``--duration``) stops
   admission (late submits are answered ``shed: draining``), flushes every
   queued request, then prints a final JSON report;
+* **watchdog bundle reload** — SIGHUP re-reads ``--bundle`` from disk,
+  VERIFIES the newest generation's integrity envelope
+  (:mod:`repro.checkpoint.integrity`) and hot-swaps it into the live engine
+  (result cache invalidated); a corrupt candidate is REFUSED — the old
+  bundle keeps serving, a ``corruption`` event + heartbeat field record the
+  refusal — so a torn re-export can never take down (or poison) a healthy
+  server;
 * **fault injection** — ``--faults engine-raise@3,slow-engine@7*0.2,...``
   wraps the engine in the serve-side fault matrix
   (:class:`repro.runtime.failures.FaultyEngine`) so the resilience ladder can
@@ -107,10 +114,44 @@ def _latency_summary(frontend) -> dict:
     return out
 
 
+def reload_bundle(frontend, bundle_dir: str, max_fallback: int = 0) -> dict:
+    """Verify-then-hot-swap the serving bundle (the watchdog reload).
+
+    Loads the newest generation under ``bundle_dir`` with verification ON;
+    on success the live engine's bundle is swapped in place and the result
+    cache invalidated (stale arrays must not answer for the new field).  On
+    ANY verification/decode failure the swap is REFUSED: the frontend keeps
+    serving the old bundle untouched, and the returned report (plus a
+    ``corruption`` obs event when a sink is attached) records why.  Returns
+    ``{"swapped": bool, "path", "step"|"error"}``.
+    """
+    from repro.serve.export import CorruptBundleError, load_bundle
+
+    obs = getattr(frontend, "obs", None)
+    try:
+        bundle = load_bundle(bundle_dir, max_fallback=max_fallback)
+    except (CorruptBundleError, FileNotFoundError, ValueError) as e:
+        if obs is not None:
+            obs.emit("corruption", target="bundle", reason=str(e))
+            obs.emit("bundle_swap", swapped=False, path=str(bundle_dir))
+        return {"swapped": False, "path": str(bundle_dir), "error": str(e)}
+    step = int(bundle.metadata.get("step", -1)) if isinstance(
+        bundle.metadata, dict) and "step" in bundle.metadata else None
+    frontend.engine.swap_bundle(bundle)
+    # the inner ServeFrontend owns the result cache (ResilientFrontend wraps
+    # one as ._fe); a bare ServeFrontend is its own cache owner
+    getattr(frontend, "_fe", frontend).invalidate_cache()
+    if obs is not None:
+        obs.emit("bundle_swap", swapped=True, path=str(bundle_dir))
+    return {"swapped": True, "path": str(bundle_dir),
+            **({"step": step} if step is not None else {})}
+
+
 def run_server(frontend, sample_cloud, *, rate: float, duration: float,
                deadline: float | None = None, heartbeat: float = 1.0,
                status_file: str | None = None, seed: int = 0,
                max_requests: int | None = None, trace_path: str | None = None,
+               bundle_dir: str | None = None,
                clock=time.monotonic, sleep=time.sleep) -> dict:
     """The serving loop: Poisson admission -> poll/flush -> heartbeat ->
     drain.  Returns the final report dict (also printed as JSON).
@@ -124,20 +165,32 @@ def run_server(frontend, sample_cloud, *, rate: float, duration: float,
     events.  ``trace_path`` exports the span buffer as Chrome-trace JSON at
     shutdown (open it at https://ui.perfetto.dev)."""
     rng = np.random.default_rng(seed + 1)
-    stop = {"sig": None}
+    stop = {"sig": None, "reload": False}
     tracer = getattr(getattr(frontend, "obs", None), "tracer", None)
+    reloads = {"swapped": 0, "refused": 0, "last": None}
 
     def _on_signal(signum, _frame):
         stop["sig"] = signum
 
+    def _on_hup(_signum, _frame):
+        stop["reload"] = True   # handled on the loop, not in the handler
+
     old = {s: signal.signal(s, _on_signal)
            for s in (signal.SIGINT, signal.SIGTERM)}
+    if bundle_dir is not None and hasattr(signal, "SIGHUP"):
+        old[signal.SIGHUP] = signal.signal(signal.SIGHUP, _on_hup)
     tickets: list[int] = []
     t0 = clock()
     next_arrival, next_beat = t0, t0
     try:
         while stop["sig"] is None and clock() - t0 < duration and \
                 (max_requests is None or len(tickets) < max_requests):
+            if stop["reload"]:
+                stop["reload"] = False
+                rep = reload_bundle(frontend, bundle_dir)
+                reloads["swapped" if rep["swapped"] else "refused"] += 1
+                reloads["last"] = rep
+                print(json.dumps({"reload": rep}), file=sys.stderr, flush=True)
             now = clock()
             if now >= next_arrival:
                 tickets.append(frontend.submit(sample_cloud(),
@@ -149,6 +202,8 @@ def run_server(frontend, sample_cloud, *, rate: float, duration: float,
             if now >= next_beat:
                 h = {**frontend.health(),
                      "latency": _latency_summary(frontend)}
+                if bundle_dir is not None:
+                    h["reloads"] = dict(reloads)
                 if tracer is not None:
                     h["trace"] = tracer.stats()
                 print(json.dumps({"t": round(now - t0, 3), **h}),
@@ -187,6 +242,8 @@ def run_server(frontend, sample_cloud, *, rate: float, duration: float,
                   if k != "frontend"},
         "signal": stop["sig"],
     }
+    if bundle_dir is not None:
+        report["reloads"] = dict(reloads)
     if tracer is not None:
         report["trace"] = tracer.stats()
         if trace_path:
@@ -280,7 +337,8 @@ def main(argv=None) -> int:
                             heartbeat=args.heartbeat,
                             status_file=args.status_file, seed=args.seed,
                             max_requests=args.max_requests,
-                            trace_path=args.trace)
+                            trace_path=args.trace,
+                            bundle_dir=args.bundle)
     finally:
         obs.close()
     return 0 if report["drained"]["unanswered"] == 0 else 1

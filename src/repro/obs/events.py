@@ -41,6 +41,12 @@ EVENT_KINDS: dict[str, dict] = {
     "serve_report": {"requests": int, "goodput": _num},
     "compile": {"backend_compiles": int, "traces": int},
     "bench": {"name": str, "value": _num},
+    # durable-state integrity (EXPERIMENTS.md §Durability): a generation
+    # failed verification / restore fell back past corrupt generations /
+    # a watchdog bundle reload swapped (or refused to swap) the live bundle
+    "corruption": {"target": str, "reason": str},
+    "fallback": {"target": str, "depth": int},
+    "bundle_swap": {"swapped": bool, "path": str},
 }
 
 

@@ -1,7 +1,10 @@
+from repro.runtime.chaos import (ChaosInjector, compose, corrupt_file,
+                                 corrupt_generation)
 from repro.runtime.elastic import (CentroidSpec, balanced_counts, remap_params,
                                    throughput_weights)
-from repro.runtime.failures import (FAULT_KINDS, SERVE_FAULT_KINDS, Fault,
-                                    FaultInjector, FaultyEngine,
+from repro.runtime.failures import (ALL_FAULT_KINDS, FAULT_KINDS,
+                                    SERVE_FAULT_KINDS, STORAGE_FAULT_KINDS,
+                                    Fault, FaultInjector, FaultyEngine,
                                     InjectedFailure, inject_nan, parse_faults,
                                     run_with_failures)
 from repro.runtime.supervisor import (Supervisor, SupervisorConfig,

@@ -113,24 +113,54 @@ FAULT_KINDS = ("crash", "nan_params", "nan_grads", "straggler")
 SERVE_FAULT_KINDS = ("engine_raise", "nan_output", "slow_engine",
                      "compile_storm")
 
+# storage fault family (consumed by runtime.chaos: filesystem corruption of
+# durable state — checkpoint generations or exported serve bundles — applied
+# when the scheduled chunk/dispatch index comes due):
+#
+#   ============= =========================================================
+#   kind           effect on the targeted generation's files
+#   ============= =========================================================
+#   bit_flip       one bit flipped at a seeded offset (bit rot / bad sector)
+#   truncate       file cut to a seeded fraction of its length (interrupted
+#                  write, filesystem shrink-on-crash)
+#   torn_write     the file's tail overwritten with zero pages (power loss
+#                  mid-write on a non-atomic filesystem)
+#   missing_file   arrays.npz removed (lost object / failed replication)
+#   ============= =========================================================
+STORAGE_FAULT_KINDS = ("bit_flip", "truncate", "torn_write", "missing_file")
+
+ALL_FAULT_KINDS = FAULT_KINDS + SERVE_FAULT_KINDS + STORAGE_FAULT_KINDS
+
 
 @dataclass(frozen=True)
 class Fault:
     """One scheduled fault.  ``chunk`` indexes the supervisor's chunk LAUNCHES
     (attempts, so a retry consumed by an earlier fault shifts later indices by
     design — schedules stay deterministic under recovery).  Serve-side kinds
-    index engine dispatch attempts instead (see SERVE_FAULT_KINDS)."""
+    index engine dispatch attempts instead (see SERVE_FAULT_KINDS).  Storage
+    kinds (STORAGE_FAULT_KINDS) fire at the same launch/dispatch indices but
+    corrupt durable state on disk: ``target`` picks the artifact family
+    ("ckpt" checkpoint root | "bundle" exported bundle root) and ``index``
+    the generation, 0 = newest."""
 
     chunk: int
-    kind: str                    # one of FAULT_KINDS | SERVE_FAULT_KINDS
+    kind: str                    # one of ALL_FAULT_KINDS
     subdomain: int | None = None  # nan_*: poison only this stacked slice
     delay: float = 0.0            # straggler/slow_engine: injected seconds
+    target: str = "ckpt"          # storage kinds: "ckpt" | "bundle"
+    index: int = 0                # storage kinds: generation index, 0=newest
 
     def __post_init__(self):
-        if self.kind not in FAULT_KINDS + SERVE_FAULT_KINDS:
+        if self.kind not in ALL_FAULT_KINDS:
             raise ValueError(
                 f"unknown fault kind {self.kind!r}; expected one of "
-                f"{FAULT_KINDS + SERVE_FAULT_KINDS}")
+                f"train {FAULT_KINDS}, serve {SERVE_FAULT_KINDS}, or "
+                f"storage {STORAGE_FAULT_KINDS}")
+        if self.kind in STORAGE_FAULT_KINDS and self.target not in (
+                "ckpt", "bundle"):
+            raise ValueError(
+                f"storage fault target {self.target!r} must be 'ckpt' or "
+                f"'bundle'")
 
 
 class FaultInjector:
@@ -155,20 +185,47 @@ class FaultInjector:
 
 def parse_faults(spec: str) -> list[Fault]:
     """Parse a CLI fault schedule: ``kind@chunk[:subdomain][*delay]`` items,
-    comma-separated — e.g. ``crash@1,nan_params@2:0,straggler@3*0.2`` or the
-    serve-side ``engine-raise@2,slow-engine@5*0.1`` (hyphens and underscores
-    in kind names are interchangeable)."""
+    comma-separated — e.g. ``crash@1,nan_params@2:0,straggler@3*0.2``, the
+    serve-side ``engine-raise@2,slow-engine@5*0.1``, or the storage family
+    ``bit-flip@2,bundle.truncate@3:1`` (``[target.]kind@chunk[:index]``;
+    target defaults to ``ckpt``, ``:n`` is the generation index, 0=newest).
+    Hyphens and underscores in kind names are interchangeable.
+
+    Unknown kinds and malformed items raise a :class:`ValueError` that lists
+    every allowed kind — a silent or cryptic parse here is a debugging trap
+    in the middle of a chaos run."""
     out = []
     for item in spec.split(","):
         item = item.strip()
         if not item:
             continue
-        kind, _, rest = item.partition("@")
+        kind, at, rest = item.partition("@")
+        kind = kind.replace("-", "_")
+        target, dot, bare = kind.partition(".")
+        if dot and target in ("ckpt", "bundle"):
+            kind = bare
+        else:
+            target = "ckpt"
+        if kind not in ALL_FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {kind!r} in {item!r}; allowed kinds: "
+                f"train {FAULT_KINDS}, serve {SERVE_FAULT_KINDS}, "
+                f"storage {STORAGE_FAULT_KINDS} "
+                f"(syntax: [ckpt.|bundle.]kind@chunk[:subdomain|:index]"
+                f"[*delay])")
         rest, _, delay = rest.partition("*")
         rest, _, sub = rest.partition(":")
-        out.append(Fault(chunk=int(rest), kind=kind.replace("-", "_"),
-                         subdomain=int(sub) if sub else None,
-                         delay=float(delay) if delay else 0.25))
+        if not at or not rest.strip().lstrip("-").isdigit():
+            raise ValueError(
+                f"malformed fault item {item!r}: expected "
+                f"[target.]kind@chunk[:subdomain][*delay] with an integer "
+                f"chunk index")
+        idx = int(sub) if sub else None
+        out.append(Fault(chunk=int(rest), kind=kind,
+                         subdomain=idx,
+                         delay=float(delay) if delay else 0.25,
+                         target=target,
+                         index=idx if idx is not None else 0))
     return out
 
 

@@ -32,6 +32,13 @@ Design decisions:
   recovery) to exactly the subdomains whose loss/params went non-finite.
 * **Backoff never recompiles.**  ``lr_scale`` is a plain (n_sub,) argument of
   the guarded dispatch.
+* **Rollback never trusts the disk.**  Every restore goes through
+  :func:`repro.checkpoint.integrity.verified_restore`: a corrupt latest
+  checkpoint (bit rot, torn write, truncation, lost file) is quarantined —
+  renamed, never deleted — and the walk falls back to the newest VERIFIED
+  generation, costing one generation of progress instead of the run.
+  Corruption/fallback land in the report, the ``train.supervisor/*``
+  counters, and the JSONL event stream.
 * **Elastic resume is metadata-driven.**  Every checkpoint carries the
   decomposition signature (n_sub + centroids), the restart/backoff state, and
   the Adam step count; :func:`elastic_resume` restores a checkpoint taken at
@@ -48,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import ckpt
+from repro.checkpoint import ckpt, integrity
 from repro.obs import MetricsRegistry, Obs
 from repro.optim import adam as adam_lib
 from repro.runtime import elastic
@@ -73,8 +80,10 @@ class SupervisorReport:
     crashes: int = 0                # InjectedFailure recoveries
     guard_trips: int = 0            # in-graph guard recoveries
     stragglers: int = 0             # straggler faults absorbed
+    corruptions: int = 0            # corrupt generations quarantined
     walltimes: list = field(default_factory=list)   # committed-chunk seconds
     recovery_s: list = field(default_factory=list)  # rollback->retried latency
+    fallback_depths: list = field(default_factory=list)  # per-rollback depth
     events: list = field(default_factory=list)      # human-readable log
 
     def as_dict(self) -> dict:
@@ -158,7 +167,8 @@ class Supervisor:
         reg = self.obs.registry
         self._counters = reg.group(
             "train.supervisor",
-            ("chunks", "restarts", "crashes", "guard_trips", "stragglers"))
+            ("chunks", "restarts", "crashes", "guard_trips", "stragglers",
+             "corruptions"))
         self._h_wall = reg.histogram("train.supervisor/chunk_walltime_s")
         self._h_rec = reg.histogram("train.supervisor/recovery_s")
 
@@ -191,7 +201,21 @@ class Supervisor:
             raise RuntimeError(
                 f"supervisor: restart budget exhausted "
                 f"({self.cfg.max_restarts}); last events: {self.report.events[-4:]}")
-        tree, _ = ckpt.restore(self.root, _as_tree(like))
+        # verify-then-restore: a poisoned latest checkpoint (bit rot, torn
+        # write, lost file) is quarantined and the walk falls back to the
+        # newest VERIFIED generation instead of ending the run — corrupt
+        # state never reaches the trainer
+        tree, _, info = integrity.verified_restore(
+            self.root, _as_tree(like), on_event=self.obs.emit)
+        for name, reason in info.quarantined:
+            self._bump("corruptions")
+            self.report.events.append(
+                f"corrupt checkpoint quarantined: {reason}")
+        if info.fallback_depth:
+            self.report.events.append(
+                f"generation fallback depth {info.fallback_depth} "
+                f"-> step {info.step}")
+        self.report.fallback_depths.append(info.fallback_depth)
         tree = jax.tree.map(jnp.asarray, tree)
         return _from_tree(tree, like)
 
@@ -364,19 +388,22 @@ def elastic_resume(root: str, trainer, decomp, state=None):
     ``trainer.init(0)``."""
     like = state if state is not None else trainer.init(0)
     like_tree = _as_tree(like)
-    manifest_leaves, manifest = ckpt.raw_leaves(root)
+    # verify first: elastic restarts read whatever generation survived the
+    # outage, so the walk quarantines corrupt ones and pins ONE verified step
+    # for both reads below
+    manifest_leaves, manifest, info = integrity.verified_raw_leaves(root)
     meta = manifest["metadata"]
     sup = meta.get("supervisor", {})
     sig = sup.get("decomp")
     n_new = decomp.n_sub
 
     if sig is None or int(sig["n_sub"]) == n_new:
-        tree, _ = ckpt.restore(root, like_tree)
+        tree, _ = ckpt.restore(root, like_tree, step=info.step)
         tree = jax.tree.map(jnp.asarray, tree)
         return _from_tree(tree, like), meta
 
     # paths are shape-agnostic, so restore hands back the OLD stacked leaves
-    old_tree, _ = ckpt.restore(root, like_tree)
+    old_tree, _ = ckpt.restore(root, like_tree, step=info.step)
     old_spec = elastic.CentroidSpec(sig["centroids"])
     new_params, src = elastic.remap_params(old_tree["params"], old_spec, decomp)
     opt = adam_lib.init_adam(new_params)

@@ -11,7 +11,8 @@ microbatching + an LRU result cache (:mod:`repro.serve.frontend`), and makes
 the whole stack survivable under production traffic — admission control,
 deadlines, degraded modes, circuit breaking (:mod:`repro.serve.resilience`).
 """
-from repro.serve.export import FieldBundle, export_bundle, load_bundle
+from repro.serve.export import (CorruptBundleError, FieldBundle,
+                                export_bundle, load_bundle)
 from repro.serve.engine import FieldEngine
 from repro.serve.frontend import ServeFrontend, UnknownTicketError
 from repro.serve.resilience import (CircuitBreaker, EngineOutputError,

@@ -131,6 +131,27 @@ class FieldEngine:
             lambda params, X, codes, wms: jax.vmap(one)(params, X, codes, wms))
         return fn
 
+    def swap_bundle(self, bundle: FieldBundle) -> None:
+        """Hot-swap the served bundle in place (the watchdog reload path).
+
+        The engine OBJECT survives, so every wrapper holding a reference
+        (``GuardedEngine``, ``FaultyEngine``, frontends) serves the new field
+        from the next dispatch; compiled programs are reused through the
+        process-wide cache when the model config is unchanged.  Callers
+        owning result caches keyed on query signatures must invalidate them
+        (:meth:`repro.serve.frontend.ServeFrontend.invalidate_cache`) — the
+        reload helper in :mod:`repro.launch.serve_field` does both, and only
+        AFTER the new bundle verified (a corrupt candidate never gets here).
+        """
+        codes = np.asarray(
+            bundle.act_codes if bundle.act_codes is not None
+            else np.zeros((bundle.n_sub,), np.int32), np.int32)
+        assert codes.shape == (bundle.n_sub,)
+        self.bundle = bundle
+        self._codes = jnp.asarray(codes)
+        self.uniform_act = fused.uniform_act_name(codes.tolist())
+        self.last_claims = None
+
     # ------------------------------------------------------------ public API
     def evaluate(self, pts, order: int = 2) -> dict:
         """Stitched field quantities at an arbitrary query cloud.

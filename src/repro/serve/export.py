@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import ckpt
+from repro.checkpoint import ckpt, integrity
 from repro.core.domain import (
     CartesianDecomposition, Decomposition, PolygonDecomposition, Topology,
     build_topology,
@@ -36,6 +36,38 @@ from repro.core.nets import MLPConfig, SubdomainModelConfig, act_code
 from repro.core.pdes import PDE, REGISTRY
 
 FORMAT = "repro.serve.bundle/1"
+
+
+class CorruptBundleError(RuntimeError):
+    """An exported bundle failed verification or could not be decoded.
+
+    Replaces the raw ``zipfile``/``numpy``/``json`` exceptions that used to
+    leak out of :func:`load_bundle` on a truncated or garbage artifact:
+    ``file`` names the failing file inside the bundle generation, ``array``
+    the failing npz member (when the corruption localizes), and ``field``
+    the bundle field that member belongs to (``params/u``, ``width_masks``,
+    ...)."""
+
+    def __init__(self, root: str, reason: str, file: str | None = None,
+                 array: str | None = None, field: str | None = None):
+        self.root, self.reason = str(root), reason
+        self.file, self.array, self.field = file, array, field
+        at = "".join([f" file={file}" if file else "",
+                      f" array={array}" if array else "",
+                      f" field={field}" if field else ""])
+        super().__init__(f"corrupt bundle under {root}{at}: {reason}")
+
+
+def _leaf_field(manifest: dict | None, array: str | None) -> str | None:
+    """Map an npz member name (``leaf_00017``) back to the bundle field its
+    path names — what an operator needs to know, not the member index."""
+    if manifest is None or array is None or not array.startswith("leaf_"):
+        return None
+    try:
+        path = manifest["paths"][int(array.split("_", 1)[1])]
+    except (KeyError, IndexError, ValueError):
+        return None
+    return path
 
 
 @dataclass
@@ -163,19 +195,72 @@ def _params_template(model_cfg: SubdomainModelConfig, n_sub: int) -> dict:
     return out
 
 
-def load_bundle(root: str, step: int | None = None) -> FieldBundle:
+def load_bundle(root: str, step: int | None = None, verify: bool = True,
+                max_fallback: int = 0) -> FieldBundle:
     """Load an exported bundle into an inference-ready :class:`FieldBundle`.
 
     Self-contained: rebuilds model config, geometry, and PDE from the manifest
     metadata, then restores the parameter arrays against a structure template
     derived from the config — no trainer (and no training state) involved.
+
+    ``verify=True`` (the default) checks the generation's integrity envelope
+    BEFORE constructing anything: any corruption — truncated/garbage npz,
+    flipped bits, missing files — raises :class:`CorruptBundleError` naming
+    the failing file/array/field instead of leaking a raw ``zipfile``/
+    ``numpy`` exception, and a corrupt bundle never reaches the engine.
+    ``max_fallback`` > 0 additionally lets the load walk back through older
+    bundle generations, SKIPPING corrupt ones (read-only — quarantine
+    renames are the single-writer trainer side's job, see
+    :func:`repro.checkpoint.integrity.latest_verified_step`); the default 0
+    makes a corrupt newest generation a hard, typed failure — the contract
+    the serve watchdog's refuse-the-swap reload relies on.
     """
-    if step is None:
-        step = ckpt.latest_step(root)
+    def _from_ckpt_err(e: integrity.CorruptCheckpointError,
+                       cause: BaseException) -> CorruptBundleError:
+        gen = os.path.basename(e.path)
+        which = ("arrays.npz" if e.array or "arrays.npz" in e.reason
+                 else "manifest.json")
+        man = None
+        try:
+            with open(os.path.join(e.path, "manifest.json")) as f:
+                man = json.load(f)
+        except Exception:
+            pass
+        err = CorruptBundleError(root, e.reason, file=f"{gen}/{which}",
+                                 array=e.array,
+                                 field=_leaf_field(man, e.array))
+        err.__cause__ = cause
+        return err
+
+    try:
         if step is None:
-            raise FileNotFoundError(f"no bundle under {root}")
-    with open(os.path.join(root, f"step_{step:010d}", "manifest.json")) as f:
-        meta = json.load(f)["metadata"]
+            if not integrity.generations(root):
+                raise FileNotFoundError(f"no bundle under {root}")
+            if verify:
+                # the serve-side load is read-only: the generation walk
+                # SKIPS corrupt bundles without quarantining them — renames
+                # belong to the (single-writer) trainer/export side
+                step = integrity.latest_verified_step(
+                    root, max_fallback=max_fallback,
+                    do_quarantine=False).step
+            else:
+                step = ckpt.latest_step(root)
+        elif verify:
+            integrity.verify_step_dir(os.path.join(root, f"step_{step:010d}"))
+        with open(os.path.join(root, f"step_{step:010d}",
+                               "manifest.json")) as f:
+            meta = json.load(f)["metadata"]
+    except integrity.NoVerifiedCheckpointError as e:
+        if e.failures:  # surface the newest generation's localized failure
+            raise _from_ckpt_err(e.failures[0], e)
+        raise CorruptBundleError(root, str(e)) from e
+    except integrity.CorruptCheckpointError as e:
+        raise _from_ckpt_err(e, e)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError, KeyError) as e:
+        if isinstance(e, FileNotFoundError) and e.filename is None:
+            raise   # the typed no-bundle miss above, not a decode failure
+        raise CorruptBundleError(root, f"manifest unreadable: {e}",
+                                 file="manifest.json") from e
     if meta.get("format") != FORMAT:
         raise ValueError(f"{root} is not a serve bundle "
                          f"(format={meta.get('format')!r})")
@@ -189,7 +274,13 @@ def load_bundle(root: str, step: int | None = None) -> FieldBundle:
                   for name in meta["width_mask_nets"]}
         like["width_masks"] = {name: np.zeros((n_sub, w), np.float32)
                                for name, w in widths.items()}
-    tree, _ = ckpt.restore(root, like, step=step)
+    try:
+        tree, _ = ckpt.restore(root, like, step=step)
+    except Exception as e:
+        # legacy (pre-integrity) bundle with a rotten npz: the verify pass
+        # had nothing to check, so the decode error surfaces here — typed
+        raise CorruptBundleError(root, f"arrays.npz undecodable: {e}",
+                                 file="arrays.npz") from e
     return FieldBundle(
         model_cfg=model_cfg,
         params=jax.tree.map(jnp.asarray, tree["params"]),

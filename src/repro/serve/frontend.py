@@ -127,6 +127,12 @@ class ServeFrontend:
             old, _ = self._cache.popitem(last=False)
             self._cache_pts -= old[0][0]
 
+    def invalidate_cache(self) -> None:
+        """Drop every cached result — REQUIRED after the engine's bundle is
+        hot-swapped (cached arrays answer for the OLD field otherwise)."""
+        self._cache.clear()
+        self._cache_pts = 0
+
     # ------------------------------------------------------------- requests
     def submit(self, pts, parent=None) -> int:
         """Queue a request; returns a ticket for :meth:`result`.
